@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference paths on CPU
+(the Pallas kernels are TPU-targeted; interpret mode measures Python, not
+hardware) plus the kernels' analytic TPU roofline estimates."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.block_quant import ops as bq
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba_scan.ref import selective_scan_ref
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    # block_quant: bytes-bound kernel; TPU est = rw bytes / HBM bw
+    x = jax.random.normal(jax.random.key(0), (4096, 4096), jnp.float32)
+    us = _time(lambda a: bq.quantize(a), x)
+    bytes_rw = x.size * 4 + x.size + 4 * (x.size // 128)
+    tpu_us = bytes_rw / HBM_BW * 1e6
+    rows.append(("kernels/block_quant_16M", us, f"tpu_roofline_us={tpu_us:.1f}"))
+
+    q = jax.random.normal(jax.random.key(1), (1, 1024, 8, 128), jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(2), (1, 1024, 2, 128), jnp.bfloat16)
+    us = _time(lambda a, b: attention_ref(a, b, b), q, k)
+    flops = 4 * 1024 * 1024 * 8 * 128  # 2 matmuls
+    rows.append(
+        ("kernels/flash_attention_1k", us, f"tpu_roofline_us={flops/PEAK_FLOPS*1e6:.1f}")
+    )
+
+    b, s, d, n = 1, 512, 512, 16
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(3), (b, s, d)))
+    a = -jnp.exp(jax.random.normal(jax.random.key(4), (d, n)) * 0.5)
+    bm = jax.random.normal(jax.random.key(5), (b, s, n))
+    cm = jax.random.normal(jax.random.key(6), (b, s, n))
+    xx = jax.random.normal(jax.random.key(7), (b, s, d))
+    us = _time(lambda *t: selective_scan_ref(*t)[0], dt, a, bm, cm, xx)
+    flops = 6 * b * s * d * n
+    rows.append(
+        ("kernels/mamba_scan_512", us, f"tpu_roofline_us={flops/PEAK_FLOPS*1e6:.2f}")
+    )
+    return rows

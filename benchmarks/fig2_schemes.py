@@ -1,0 +1,28 @@
+"""Paper Fig. 2: data-movement overheads of each scheme, normalized to the
+monolithic `local` configuration, per workload."""
+from __future__ import annotations
+
+import time
+
+from repro.core.sim import SCHEMES, SimConfig, fig2, slowdowns
+
+WORKLOADS = ("pr", "bf", "ts", "nw", "dr", "pf", "st", "ml")
+
+
+def run(n_accesses: int = 20_000, link_bw_frac: float = 0.25):
+    cfg = SimConfig(link_bw_frac=link_bw_frac)
+    rows = []
+    t0 = time.time()
+    grid = fig2(cfg, workloads=WORKLOADS, schemes=SCHEMES, n_accesses=n_accesses)
+    per_call = (time.time() - t0) * 1e6 / (len(WORKLOADS) * len(SCHEMES))
+    slow = slowdowns(grid)
+    for w in WORKLOADS:
+        for s in SCHEMES:
+            rows.append((f"fig2/{w}/{s}", per_call, f"slowdown={slow[w][s]:.3f}"))
+    dae = [slow[w]["daemon"] for w in WORKLOADS]
+    page = [slow[w]["page"] for w in WORKLOADS]
+    import math
+
+    g = math.exp(sum(math.log(p / d) for p, d in zip(page, dae)) / len(dae))
+    rows.append((f"fig2/geomean_daemon_vs_page", per_call, f"speedup={g:.3f}"))
+    return rows

@@ -1,0 +1,22 @@
+"""Paper Fig. 4 (bottom): multiple applications sharing one CC + MC — DaeMon
+vs page under interference."""
+from __future__ import annotations
+
+import time
+
+from repro.core.sim import fig4_bottom
+
+
+def run(n_accesses: int = 15_000):
+    t0 = time.time()
+    rows_raw = fig4_bottom(workloads=("pr", "nw", "dr", "st"), n_jobs=4,
+                           n_accesses=n_accesses)
+    per_call = (time.time() - t0) * 1e6 / max(len(rows_raw), 1)
+    return [
+        (
+            f"fig4bot/{r['workload']}/jobs{r['n_jobs']}",
+            per_call,
+            f"speedup={r['speedup']:.3f};cost_ratio={r['access_cost_ratio']:.3f}",
+        )
+        for r in rows_raw
+    ]

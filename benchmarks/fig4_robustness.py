@@ -1,0 +1,28 @@
+"""Paper Fig. 4 (top): DaeMon's speedup over the page scheme across network
+bandwidths, MC counts, and applications."""
+from __future__ import annotations
+
+import time
+
+from repro.core.sim import fig4_top
+
+
+def run(n_accesses: int = 15_000):
+    t0 = time.time()
+    rows_raw = fig4_top(
+        workloads=("pr", "nw", "st", "ml"),
+        bw_fracs=(0.5, 0.25, 0.125),
+        n_mcs_list=(1, 2, 4),
+        n_accesses=n_accesses,
+    )
+    per_call = (time.time() - t0) * 1e6 / max(len(rows_raw), 1)
+    rows = []
+    for r in rows_raw:
+        rows.append(
+            (
+                f"fig4top/{r['workload']}/bw{r['bw_frac']}/mc{r['n_mcs']}",
+                per_call,
+                f"speedup={r['speedup']:.3f};cost_ratio={r['access_cost_ratio']:.3f}",
+            )
+        )
+    return rows

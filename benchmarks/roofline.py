@@ -1,0 +1,38 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json (produced by ``python -m repro.launch.dryrun
+--all``) and emits one row per (arch x cell x mesh x movement): the three
+terms in seconds, the bottleneck, and MODEL_FLOPS/HLO_FLOPs."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ART = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load() -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        r = json.load(open(f))
+        if r.get("ok"):
+            recs.append(r)
+    return recs
+
+
+def run():
+    rows = []
+    for r in load():
+        tag = f"roofline/{r['arch']}/{r['cell']}/{r['mesh']}/{r['movement']}"
+        ratio = r.get("model_flops_ratio", 0.0)
+        derived = (
+            f"t_comp={r['t_compute_s']:.4f};t_mem={r['t_memory_s']:.4f};"
+            f"t_coll={r['t_collective_s']:.4f};bound={r['bottleneck']};"
+            f"useful_flops_frac={ratio:.3f}"
+        )
+        rows.append((tag, r.get("compile_s", 0.0) * 1e6, derived))
+    if not rows:
+        rows.append(("roofline/missing_artifacts_run_dryrun_all", 0.0, "n/a"))
+    return rows

@@ -1,0 +1,31 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import bench_kernels, fig2_schemes, fig4_multijob, fig4_robustness, roofline
+
+    print("name,us_per_call,derived")
+    sections = [
+        ("fig2", fig2_schemes.run),
+        ("fig4_top", fig4_robustness.run),
+        ("fig4_bottom", fig4_multijob.run),
+        ("kernels", bench_kernels.run),
+        ("roofline", roofline.run),
+    ]
+    failures = 0
+    for name, fn in sections:
+        try:
+            for tag, us, derived in fn():
+                print(f"{tag},{us:.1f},{derived}")
+        except Exception as e:  # keep the harness going; report at the end
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Reproduce the paper's headline numbers: geomean daemon-vs-page speedup and
+access-cost reduction across the workload suite and network range.
+
+    PYTHONPATH=src python examples/simulate_daemon.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    from repro.core.sim import paper_claims
+
+    print("DaeMon vs page-granularity movement (paper claims: 2.39x perf, "
+          "3.06x access cost)")
+    r = paper_claims(n_accesses=20_000)
+    for bw, row in r["per_bw"].items():
+        per_w = " ".join(f"{w}:{v:.2f}" for w, v in row["per_workload"].items())
+        print(f"  link bw = {bw:5.3f} x bus: perf {row['perf']:.2f}x  "
+              f"cost {row['cost']:.2f}x   [{per_w}]")
+    print(f"  GEOMEAN: perf {r['perf_speedup_geomean']:.2f}x  "
+          f"access-cost {r['access_cost_reduction_geomean']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Sharded, compressed, async checkpointing with atomic publish and elastic
+(mesh-agnostic) restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000100/
+        manifest.json        — step, arrays {path -> shape, dtype, hash},
+                               mesh/topology note, data-pipeline state
+        arrays/<name>.npz.zst — zstandard-compressed npz, one file per
+                               host-rank-owned group (single-host here: one)
+
+Atomicity: written to ``step_X.tmp`` then os.rename'd — a crashed writer
+never corrupts the latest checkpoint.  ``save_async`` runs serialization on
+a background thread off the training critical path (the arrays are first
+snapshot to host to decouple from donated device buffers).  Restore is
+mesh-agnostic: values are re-device_put with the CURRENT sharding rules, so
+restoring onto a different DP/TP degree (elastic scaling) just works.
+zstd on fp32 optimizer state is the checkpoint-path cousin of DaeMon's link
+compression (page-granularity movement compressed off the hot path).
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+import zstandard
+
+_FLAT_SEP = "/"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _FLAT_SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(tree: Any, flat: Dict[str, np.ndarray]) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    vals = []
+    for path, leaf in leaves:
+        key = _FLAT_SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        v = flat[key]
+        expect = getattr(leaf, "shape", None)
+        if expect is not None and tuple(v.shape) != tuple(expect):
+            raise ValueError(f"{key}: checkpoint shape {v.shape} != expected {expect}")
+        vals.append(v)
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ---------------- save ----------------
+    def _write(self, step: int, flat: Dict[str, np.ndarray], extra: Dict) -> Path:
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        (tmp / "arrays").mkdir(parents=True)
+        cctx = zstandard.ZstdCompressor(level=3)
+        manifest = {"step": step, "arrays": {}, "extra": extra, "time": time.time()}
+        buf = io.BytesIO()
+        np.savez(buf, **flat)
+        payload = cctx.compress(buf.getvalue())
+        (tmp / "arrays" / "shard_0.npz.zst").write_bytes(payload)
+        for k, v in flat.items():
+            manifest["arrays"][k] = {
+                "shape": list(v.shape),
+                "dtype": str(v.dtype),
+            }
+        manifest["hash"] = hashlib.sha256(payload).hexdigest()
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> Path:
+        return self._write(step, _flatten(tree), extra or {})
+
+    def save_async(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
+        """Snapshot to host now; compress+write on a background thread."""
+        self.wait()
+        flat = _flatten(tree)  # host copy (decouples from donated buffers)
+
+        def work():
+            try:
+                self._write(step, flat, extra or {})
+            except BaseException as e:  # surfaced by wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ---------------- restore ----------------
+    def all_steps(self) -> List[int]:
+        return sorted(
+            int(p.name.split("_")[1])
+            for p in self.dir.glob("step_*")
+            if p.is_dir() and not p.name.endswith(".tmp")
+        )
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self, step: Optional[int], like: Any, *, shardings: Any = None,
+        validate_hash: bool = True,
+    ) -> Tuple[Any, Dict]:
+        """Restore into the structure of ``like``; device_put with
+        ``shardings`` (tree or prefix) if given — elastic re-shard happens
+        here: the stored global arrays are laid out for whatever mesh the
+        caller is running now."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        payload = (d / "arrays" / "shard_0.npz.zst").read_bytes()
+        if validate_hash:
+            h = hashlib.sha256(payload).hexdigest()
+            if h != manifest["hash"]:
+                raise IOError(f"checkpoint {d} corrupt: hash mismatch")
+        dctx = zstandard.ZstdDecompressor()
+        with np.load(io.BytesIO(dctx.decompress(payload))) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten_into(like, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda v, s: jax.device_put(v, s), tree, shardings
+            )
+        return tree, manifest["extra"]

@@ -1,0 +1,6 @@
+# The paper's primary contribution, two layers (see DESIGN.md §2):
+#   repro.core.sim      — faithful event-driven DS simulator (DaeMon vs baselines)
+#   repro.core.movement — TPU-native data-movement engine for the JAX framework
+from repro.core import sim
+
+__all__ = ["sim"]

@@ -1,0 +1,153 @@
+"""DaeMon collective primitives (shard_map level).
+
+These are the TPU realization of the paper's three techniques on explicit
+collectives (DESIGN.md §2.2):
+
+  compressed_all_gather     — link compression on page-granularity moves:
+                              per-block int8 quantize -> gather -> dequant
+                              (wire ~1.94x smaller than bf16, ~3.9x vs f32)
+  compressed_grad_sync      — reduce-scatter with int8 link compression and
+                              ERROR FEEDBACK (the residual re-enters the next
+                              step's gradient, so compression error does not
+                              accumulate — 1-bit-Adam-style)
+  chunked_all_gather        — decoupled dual-granularity movement: the
+                              critical chunk (needed-now slice) is emitted
+                              first and uncompressed (sub-block queue), the
+                              remaining page chunks follow compressed (page
+                              queue); XLA's async collective streams overlap
+                              them with compute in program order.
+
+All primitives run inside ``shard_map`` over the DP axes.  Used by the
+daemon train/serve steps, the movement benchmarks and examples; unit-tested
+on 8 fake devices in tests/test_movement.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_quant import ops as bq
+
+Axis = str
+
+
+def _flatten_pad(x: jax.Array, block: int) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block), pad
+
+
+def compressed_all_gather(
+    x: jax.Array, axis_name: Axis, *, compress: Optional[str] = "int8",
+    tiled: bool = True,
+) -> jax.Array:
+    """All-gather x's leading dim over ``axis_name``; payload on the wire is
+    int8 + per-128-block f32 scales when compress='int8'."""
+    if compress is None or compress == "none":
+        return jax.lax.all_gather(x, axis_name, tiled=tiled)
+    if compress == "bf16":
+        g = jax.lax.all_gather(x.astype(jnp.bfloat16), axis_name, tiled=tiled)
+        return g.astype(x.dtype)
+    assert compress == "int8", compress
+    xf, pad = _flatten_pad(x, 128)
+    q, s = bq.quantize(xf)
+    qg = jax.lax.all_gather(q, axis_name, tiled=True)
+    sg = jax.lax.all_gather(s, axis_name, tiled=True)
+    full = bq.dequantize(qg, sg, x.dtype).reshape(-1)
+    n = jax.lax.axis_size(axis_name)
+    if pad:
+        per = xf.size  # padded elements per shard
+        full = full.reshape(n, per)[:, : x.size].reshape(-1)
+    return full.reshape((n * x.shape[0],) + x.shape[1:])
+
+
+def compressed_grad_sync(
+    g: jax.Array, axis_name: Axis, residual: Optional[jax.Array] = None,
+    *, compress: Optional[str] = "int8",
+) -> Tuple[jax.Array, jax.Array]:
+    """Mean-reduce g over the DP axis with link compression + error feedback.
+
+    Returns (g_mean, new_residual).  The wire carries int8 blocks via
+    psum-of-dequantized shards implemented as all-to-all(int8) + local sum:
+    each device quantizes its local gradient once, ships 1/n of it to every
+    peer, and sums dequantized contributions for its own slice, then
+    all-gathers the reduced slices (also int8).  residual holds what
+    quantization dropped; it is added back before the next quantization.
+    """
+    if compress in (None, "none", "bf16"):
+        dt = jnp.bfloat16 if compress == "bf16" else g.dtype
+        gm = jax.lax.pmean(g.astype(dt), axis_name).astype(g.dtype)
+        return gm, jnp.zeros((), g.dtype)
+
+    assert compress == "int8", compress
+    n = jax.lax.axis_size(axis_name)
+    if residual is not None and residual.ndim == g.ndim:
+        g = g + residual.astype(g.dtype)
+
+    flat = g.reshape(-1)
+    pad = (-flat.shape[0]) % (128 * n)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    xf = flat.reshape(n, -1, 128)  # shard s for peer s
+
+    q, s = bq.quantize(xf.reshape(-1, 128))
+    q = q.reshape(n, -1, 128)
+    s = s.reshape(n, -1)
+    # error feedback: what int8 dropped, fed back next step
+    deq_local = bq.dequantize(q.reshape(-1, 128), s.reshape(-1, 1), jnp.float32)
+    new_res = (flat - deq_local.reshape(-1))[: g.size].reshape(g.shape).astype(jnp.float32)
+
+    # ship int8 shards: all_to_all swaps the leading shard dim
+    qt = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0, tiled=False)
+    st = jax.lax.all_to_all(s, axis_name, split_axis=0, concat_axis=0, tiled=False)
+    # each device now holds n peers' int8 contributions for ITS slice
+    contrib = bq.dequantize(qt.reshape(-1, 128), st.reshape(-1, 1), jnp.float32)
+    contrib = contrib.reshape(n, -1)
+    my_slice = jnp.mean(contrib, axis=0)  # (slice_elems,)
+    # gather the reduced slices back (compressed again on the wire)
+    qg, sg = bq.quantize(my_slice.reshape(-1, 128))
+    qall = jax.lax.all_gather(qg, axis_name, tiled=True)
+    sall = jax.lax.all_gather(sg, axis_name, tiled=True)
+    full = bq.dequantize(qall, sall, jnp.float32).reshape(-1)
+    gm = full[: g.size].reshape(g.shape).astype(g.dtype)
+    return gm, new_res
+
+
+def chunked_all_gather(
+    x: jax.Array, axis_name: Axis, *, page_chunks: int = 4,
+    critical_rows: int = 0, compress_pages: str = "int8",
+) -> jax.Array:
+    """Dual-granularity gather of x (leading dim = rows) over the DP axis.
+
+    The first ``critical_rows`` rows are the sub-block class: gathered FIRST,
+    uncompressed (latency path).  The remainder is split into ``page_chunks``
+    compressed page-class gathers.  Program order guarantees the critical
+    gather is issued before any page chunk; on TPU, XLA's async collective
+    scheduler overlaps the page chunks with downstream compute — this is the
+    paper's fixed-rate bandwidth partition expressed as an HLO schedule.
+    """
+    rows = x.shape[0]
+    n = jax.lax.axis_size(axis_name)
+    critical_rows = min(critical_rows, rows)
+    parts = []  # (gathered, part_rows)
+    if critical_rows:
+        crit = jax.lax.all_gather(x[:critical_rows], axis_name, tiled=True)
+        parts.append((crit, critical_rows))
+    body_rows = rows - critical_rows
+    if body_rows:
+        page_chunks = max(1, min(page_chunks, body_rows))
+        bounds = [critical_rows + (body_rows * i) // page_chunks for i in range(page_chunks + 1)]
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            if hi > lo:
+                g = compressed_all_gather(x[lo:hi], axis_name, compress=compress_pages)
+                parts.append((g, hi - lo))
+    # each part is (n * part_rows, ...) shard-tiled; re-interleave to (n*rows, ...)
+    stacked = jnp.concatenate(
+        [p.reshape(n, r, *x.shape[1:]) for p, r in parts], axis=1
+    )
+    return stacked.reshape(n * rows, *x.shape[1:])

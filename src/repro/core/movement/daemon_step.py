@@ -1,0 +1,112 @@
+"""The DaeMon-integrated training step: mixed-precision ZeRO with page-class
+link compression.
+
+Differences from the baseline GSPMD step (launch/steps.py):
+
+  * the f32 MASTER parameters live in the optimizer state (sharded exactly
+    like the baseline params: FSDP over "data", TP over "model");
+  * the forward/backward runs on a bf16 WORKING copy — so every
+    per-layer parameter all-gather GSPMD emits inside the scan moves bf16,
+    i.e. the page-granularity traffic is 2x smaller on the wire than the f32
+    baseline (4x with expert_weights="int8" for MoE page-class tensors);
+  * gradients arrive sharded (GSPMD reduce-scatters them to match the FSDP
+    sharding) in bf16 — halving the gradient page traffic as well;
+  * with grad_sync="int8", an explicit error-feedback residual (sharded,
+    f32) is carried in the optimizer state and folded into the next step.
+
+The collective-byte reduction is measured by the dry-run (§Perf: baseline vs
+daemon rooflines); the selection unit (engine.py) picks the config level.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.movement.engine import DAEMON_DEFAULT, MovementConfig
+from repro.kernels.block_quant import ops as bq
+from repro.models import model as M
+from repro.optim import adamw
+
+
+class DaemonState(NamedTuple):
+    adam: adamw.AdamWState  # m, v, step — f32, sharded like params
+    master: Any  # f32 master params (sharded)
+    residual: Any  # error-feedback residual (zeros unless grad_sync="int8")
+
+
+def working_copy(master: Any, cfg_mv: MovementConfig) -> Any:
+    """bf16 (or int8-roundtripped) working parameters from the f32 master."""
+
+    def one(p):
+        if cfg_mv.expert_weights == "int8" and p.ndim >= 3 and p.shape[-1] % 128 == 0:
+            # page-class tensors (stacked expert/layer weights): int8 wire
+            q, s = bq.quantize(p.astype(jnp.float32))
+            return bq.dequantize(q, s, jnp.bfloat16)
+        return p.astype(jnp.bfloat16)
+
+    return jax.tree.map(one, master)
+
+
+def init_state(master: Any) -> DaemonState:
+    return DaemonState(
+        adam=adamw.init(master),
+        master=master,
+        residual=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), master),
+    )
+
+
+def init_abstract(master: Any) -> DaemonState:
+    sds = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), master)
+    res = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), master)
+    return DaemonState(adam=adamw.init_abstract(master), master=sds, residual=res)
+
+
+def state_shardings(psh: Any, replicated) -> "DaemonState":
+    """Sharding tree matching init_abstract (psh = param shardings)."""
+    return DaemonState(
+        adam=adamw.AdamWState(replicated, psh, psh),
+        master=psh,
+        residual=psh,
+    )
+
+
+def make_daemon_train_step(
+    cfg: ModelConfig,
+    *,
+    sched: Callable,
+    engine_cfg: Optional[MovementConfig] = None,
+    num_microbatches: int = 1,
+) -> Callable:
+    mv = engine_cfg or DAEMON_DEFAULT
+    from repro.launch.steps import _microbatched_grads
+
+    def train_step(params_bf16, state: DaemonState, batch):
+        # params_bf16 is the donated working copy from the previous step;
+        # grads are computed against it (GSPMD gathers bf16 pages per layer)
+        grads, metrics = _microbatched_grads(cfg, params_bf16, batch, num_microbatches)
+
+        if mv.grad_sync == "int8":
+            # error feedback: dropped quantization error re-enters here
+            def fold(g, r):
+                g32 = g.astype(jnp.float32) + r
+                if g32.ndim >= 2 and g32.shape[-1] % 128 == 0:
+                    q, s = bq.quantize(g32)
+                    deq = bq.dequantize(q, s, jnp.float32)
+                    return deq, g32 - deq
+                return g32, jnp.zeros_like(g32)
+
+            pairs = jax.tree.map(fold, grads, state.residual)
+            grads = jax.tree.map(lambda pr: pr[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+            residual = jax.tree.map(lambda pr: pr[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        else:
+            residual = state.residual
+
+        lr = sched(state.adam.step)
+        master, adam_state, om = adamw.update(grads, state.adam, state.master, lr)
+        new_params = working_copy(master, mv)
+        return new_params, DaemonState(adam_state, master, residual), {**metrics, **om}
+
+    return train_step

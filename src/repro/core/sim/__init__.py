@@ -1,0 +1,18 @@
+from repro.core.sim.config import SCHEMES, Metrics, SimConfig
+from repro.core.sim.engine import Simulator, simulate
+from repro.core.sim.runner import (
+    fig2,
+    fig4_bottom,
+    fig4_top,
+    geomean,
+    paper_claims,
+    run_one,
+    slowdowns,
+)
+from repro.core.sim.trace import WORKLOADS, generate
+
+__all__ = [
+    "SCHEMES", "Metrics", "SimConfig", "Simulator", "simulate",
+    "fig2", "fig4_bottom", "fig4_top", "geomean", "paper_claims",
+    "run_one", "slowdowns", "WORKLOADS", "generate",
+]

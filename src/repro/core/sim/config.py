@@ -1,0 +1,95 @@
+"""Simulator configuration for the disaggregated-system model (§2.1 of
+DESIGN.md).  Units: CPU cycles (3 GHz nominal).  Defaults follow the paper's
+evaluation: local memory fits ~20% of the application footprint, network
+bandwidth is 1/2..1/8 of the memory bus bandwidth [Gao et al., OSDI'16], and
+page movements may be link-compressed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Tuple
+
+SCHEMES = ("local", "page", "page_free", "cacheline", "both", "daemon")
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    # geometry
+    line_bytes: int = 64
+    page_bytes: int = 4096
+    header_bytes: int = 16  # per network packet
+
+    # CC
+    llc_bytes: int = 1 << 21  # 2 MiB LLC
+    llc_assoc: int = 16
+    llc_lat: int = 30
+    local_mem_frac: float = 0.2  # local memory fits ~20% of footprint
+    mem_lat: int = 300  # local DRAM access latency (~100 ns)
+    mlp: int = 16  # outstanding-miss window before a core stalls (OoO MSHRs)
+    n_cores: int = 4  # threads per application (Sniper-style multicore CC)
+    gap_scale: float = 0.25  # compute-gap scale (OoO cores retire ~4 IPC)
+
+    # network / MCs
+    n_mcs: int = 1
+    bus_bw: float = 32.0  # bytes/cycle (~96 GB/s @ 3 GHz)
+    link_bw_frac: float = 0.25  # network bw = frac * bus bw (1/2 .. 1/8)
+    net_lat: int = 3000  # one-way propagation+protocol (~1 us)
+    remote_mem_lat: int = 300  # DRAM access at the MC
+
+    # DaeMon
+    line_share: float = 0.6  # bandwidth fraction reserved for the sub-block queue
+    inflight_lines: int = 128  # inflight sub-block buffer capacity
+    inflight_pages: int = 16  # inflight page buffer capacity
+    page_throttle_hi: float = 0.75  # stop issuing pages above this utilization
+    compress: bool = True
+    comp_lat: int = 750  # page compression latency at the MC (~250 ns)
+    decomp_lat: int = 750  # page decompression latency at the CC
+
+    @property
+    def link_bw(self) -> float:
+        return self.bus_bw * self.link_bw_frac
+
+    def with_(self, **kw) -> "SimConfig":
+        return replace(self, **kw)
+
+
+@dataclass
+class Metrics:
+    scheme: str = ""
+    workload: str = ""
+    cycles: float = 0.0  # end-to-end execution time
+    accesses: int = 0
+    llc_hits: int = 0
+    local_hits: int = 0
+    remote_misses: int = 0
+    miss_latency_sum: float = 0.0  # total cycles spent servicing LLC misses
+    net_bytes: float = 0.0  # bytes transmitted over the network
+    pages_moved: int = 0
+    lines_moved: int = 0
+    bytes_saved_compression: float = 0.0
+    stall_cycles: float = 0.0
+
+    @property
+    def avg_access_cost(self) -> float:
+        """Average LLC-miss service latency — the paper's 'data access cost'."""
+        n = self.llc_misses
+        return self.miss_latency_sum / n if n else 0.0
+
+    @property
+    def llc_misses(self) -> int:
+        return self.local_hits + self.remote_misses
+
+    def as_dict(self) -> dict:
+        return {
+            "scheme": self.scheme,
+            "workload": self.workload,
+            "cycles": self.cycles,
+            "avg_access_cost": self.avg_access_cost,
+            "net_bytes": self.net_bytes,
+            "pages_moved": self.pages_moved,
+            "lines_moved": self.lines_moved,
+            "llc_hits": self.llc_hits,
+            "local_hits": self.local_hits,
+            "remote_misses": self.remote_misses,
+            "bytes_saved_compression": self.bytes_saved_compression,
+        }

@@ -1,0 +1,573 @@
+"""Event-driven simulator of a disaggregated system (CCs + MCs + network),
+implementing the paper's data-movement schemes:
+
+  local      — monolithic upper bound: every LLC miss is a local DRAM access
+  page       — migrate 4 KiB pages into local memory over a FIFO link
+  page_free  — page scheme with zero-cost transfers (idealized locality bound)
+  cacheline  — move only 64 B lines into the LLC (no local-memory migration)
+  both       — naively issue line+page on the SAME FIFO link; first wins
+  daemon     — DaeMon: decoupled line/page queues with fixed-rate bandwidth
+               partitioning, inflight-buffer-driven selection unit, and link
+               compression on page movements only
+
+The network link for the baselines is store-and-forward FIFO (this is where
+critical lines queue behind concurrently-moved pages — the paper's core
+pathology).  DaeMon's link is a fluid dual-queue: when both queues are busy
+the sub-block queue drains at a fixed ``line_share`` of the bandwidth, i.e.
+the paper's queue controller serving lines at a higher predefined fixed rate.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.sim.config import Metrics, SimConfig
+from repro.core.sim.trace import COMPRESSIBILITY, Trace
+
+
+# --------------------------------------------------------------------------
+# event engine
+# --------------------------------------------------------------------------
+
+
+class Engine:
+    def __init__(self):
+        self.heap: List = []
+        self._seq = itertools.count()
+        self.now = 0.0
+
+    def at(self, t: float, fn: Callable[[float], None]) -> None:
+        heapq.heappush(self.heap, (t, next(self._seq), fn))
+
+    def run(self) -> float:
+        while self.heap:
+            t, _, fn = heapq.heappop(self.heap)
+            self.now = t
+            fn(t)
+        return self.now
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+
+class LRU:
+    """LRU cache over fixed-size entries; returns evicted (tag, dirty)."""
+
+    __slots__ = ("cap", "d")
+
+    def __init__(self, capacity: int):
+        self.cap = max(1, capacity)
+        self.d: OrderedDict = OrderedDict()
+
+    def access(self, tag, dirty: bool = False) -> bool:
+        if tag in self.d:
+            self.d.move_to_end(tag)
+            if dirty:
+                self.d[tag] = True
+            return True
+        return False
+
+    def insert(self, tag, dirty: bool = False):
+        if tag in self.d:
+            self.d.move_to_end(tag)
+            self.d[tag] = self.d[tag] or dirty
+            return None
+        self.d[tag] = dirty
+        if len(self.d) > self.cap:
+            return self.d.popitem(last=False)
+        return None
+
+    def __contains__(self, tag):
+        return tag in self.d
+
+
+# --------------------------------------------------------------------------
+# links
+# --------------------------------------------------------------------------
+
+
+class FifoLink:
+    """Store-and-forward FIFO: one queue, transfers fully serialize."""
+
+    def __init__(self, eng: Engine, bw: float):
+        self.eng = eng
+        self.bw = bw
+        self.busy_until = 0.0
+        self.bytes = 0.0
+
+    def send(self, t: float, size: float, cb: Callable[[float], None], cls: str = "line"):
+        start = max(t, self.busy_until)
+        done = start + size / self.bw
+        self.busy_until = done
+        self.bytes += size
+        self.eng.at(done, cb)
+
+
+class DualQueueLink:
+    """DaeMon's decoupled queues: fluid bandwidth partition between the
+    sub-block (line) queue and the page queue.  Within a queue transfers
+    serialize FIFO; across queues the line queue gets ``line_share`` of the
+    bandwidth whenever it is non-empty (and all of it when pages are idle)."""
+
+    def __init__(self, eng: Engine, bw: float, line_share: float):
+        self.eng = eng
+        self.bw = bw
+        self.share = {"line": line_share, "page": 1.0 - line_share}
+        self.q: Dict[str, deque] = {"line": deque(), "page": deque()}
+        self.head_rem: Dict[str, float] = {"line": 0.0, "page": 0.0}
+        self.cb: Dict[str, Optional[Callable]] = {"line": None, "page": None}
+        self.last = 0.0
+        self.epoch = 0
+        self.bytes = 0.0
+
+    def _rates(self) -> Dict[str, float]:
+        active = [c for c in ("line", "page") if self.head_rem[c] > 0]
+        if not active:
+            return {"line": 0.0, "page": 0.0}
+        if len(active) == 2:
+            return {c: self.share[c] * self.bw for c in active}
+        return {active[0]: self.bw, ("page" if active[0] == "line" else "line"): 0.0}
+
+    def _advance(self, t: float):
+        dt = t - self.last
+        if dt > 0:
+            rates = self._rates()
+            for c in ("line", "page"):
+                if self.head_rem[c] > 0:
+                    self.head_rem[c] = max(0.0, self.head_rem[c] - rates[c] * dt)
+        self.last = t
+
+    def _schedule(self, t: float):
+        self.epoch += 1
+        epoch = self.epoch
+        rates = self._rates()
+        best = None
+        for c in ("line", "page"):
+            if self.head_rem[c] > 0 and rates[c] > 0:
+                eta = t + self.head_rem[c] / rates[c]
+                if best is None or eta < best[0]:
+                    best = (eta, c)
+        if best is None:
+            return
+        eta, c = best
+
+        def fire(tt: float, _c=c, _epoch=epoch):
+            if _epoch != self.epoch:
+                return  # stale
+            self._advance(tt)
+            # epsilon is in *bytes*: float residue from rate*dt rounding can
+            # exceed 1e-9 while eta rounds to the same timestamp (no progress,
+            # infinite event storm).  1e-3 bytes is far below any packet size.
+            if self.head_rem[_c] > 1e-3:
+                self._schedule(tt)
+                return
+            cb = self.cb[_c]
+            self._pop_next(_c)
+            self._schedule(tt)
+            if cb:
+                cb(tt)
+
+        self.eng.at(eta, fire)
+
+    def _pop_next(self, c: str):
+        if self.q[c]:
+            size, cb = self.q[c].popleft()
+            self.head_rem[c] = size
+            self.cb[c] = cb
+        else:
+            self.head_rem[c] = 0.0
+            self.cb[c] = None
+
+    def _flush(self, t: float):
+        """Complete any head that already drained to zero during _advance —
+        its scheduled fire event may be stale and must not drop the callback."""
+        for c in ("line", "page"):
+            while self.cb[c] is not None and self.head_rem[c] <= 1e-3:
+                cb = self.cb[c]
+                self._pop_next(c)
+                cb(t)
+
+    def send(self, t: float, size: float, cb: Callable[[float], None], cls: str = "line"):
+        self._advance(t)
+        self._flush(t)
+        self.bytes += size
+        if self.cb[cls] is not None:
+            self.q[cls].append((size, cb))
+        else:
+            self.head_rem[cls] = size
+            self.cb[cls] = cb
+        self._schedule(t)
+
+
+# --------------------------------------------------------------------------
+# requests / CC state
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class Request:
+    addr: int
+    t_issue: float
+    write: bool
+    core: "Core"
+    done: bool = False
+    t_done: float = 0.0
+
+
+@dataclass
+class Core:
+    cid: int
+    gaps: np.ndarray
+    addrs: np.ndarray
+    writes: np.ndarray
+    llc: LRU
+    idx: int = 0
+    t: float = 0.0
+    outstanding: deque = field(default_factory=deque)
+    stalled: bool = False
+    t_end: float = -1.0
+
+
+class Simulator:
+    def __init__(
+        self,
+        cfg: SimConfig,
+        scheme: str,
+        traces: List[Trace],
+        workload: str = "",
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.scheme = scheme
+        self.workload = workload
+        self.eng = Engine()
+        self.rng = np.random.default_rng(seed + 17)
+        self.m = Metrics(scheme=scheme, workload=workload)
+
+        footprint = int(max(int(tr[1].max()) + 64 for tr in traces))
+        llc_lines = cfg.llc_bytes // cfg.line_bytes
+        self.cores = [
+            Core(i, tr[0], tr[1] >> 6, tr[2], LRU(llc_lines // max(1, len(traces))))
+            for i, tr in enumerate(traces)
+        ]
+        # local memory: page-granularity cache of remote memory
+        n_pages_total = footprint // cfg.page_bytes + 1
+        self.local = LRU(max(1, int(n_pages_total * cfg.local_mem_frac)))
+        self.lines_per_page = cfg.page_bytes // cfg.line_bytes
+
+        # per-MC links (downlink data path; request path folded into net_lat)
+        mk = (
+            (lambda: DualQueueLink(self.eng, cfg.link_bw, cfg.line_share))
+            if scheme == "daemon"
+            else (lambda: FifoLink(self.eng, cfg.link_bw))
+        )
+        self.links = [mk() for _ in range(cfg.n_mcs)]
+
+        # pending remote fetches (coalescing)
+        self.pending_lines: Dict[int, List[Request]] = {}
+        self.pending_pages: Dict[int, List[Request]] = {}
+        # daemon inflight buffers
+        self.retry: deque = deque()
+
+        base = COMPRESSIBILITY.get(workload, 2.0)
+        self.comp_ratio = lambda: max(1.0, self.rng.normal(base, 0.15 * base))
+
+    # ---------------- address helpers ----------------
+    def page_of(self, line: int) -> int:
+        return line // self.lines_per_page
+
+    def mc_of(self, page: int) -> int:
+        return page % self.cfg.n_mcs
+
+    # ---------------- core execution ----------------
+    def start(self):
+        for c in self.cores:
+            self.eng.at(0.0, lambda t, c=c: self.core_step(c, t))
+
+    def core_step(self, core: Core, t: float):
+        cfg = self.cfg
+        core.stalled = False
+        t = max(t, core.t)
+        n = len(core.addrs)
+        while core.idx < n:
+            # retire completed requests from the in-order window
+            while core.outstanding and core.outstanding[0].done:
+                core.outstanding.popleft()
+            if len(core.outstanding) >= cfg.mlp:
+                core.stalled = True
+                core.t = t
+                self.m.stall_cycles += 1  # counted per stall episode
+                return  # resumed by completion of the oldest request
+            line = int(core.addrs[core.idx])
+            wr = bool(core.writes[core.idx])
+            t += int(core.gaps[core.idx] * cfg.gap_scale)
+            core.idx += 1
+            self.m.accesses += 1
+            if core.llc.access(line, wr):
+                self.m.llc_hits += 1
+                t += cfg.llc_lat
+                continue
+            t += cfg.llc_lat  # miss detection
+            lat = self.miss(core, line, wr, t)
+            if lat is not None:  # served synchronously (local memory / 'local')
+                t += lat
+        core.t = t
+        core.t_end = max(core.t_end, t)
+
+    def _complete(self, req: Request, t: float):
+        req.done = True
+        req.t_done = t
+        self.m.miss_latency_sum += t - req.t_issue
+        core = req.core
+        if core.stalled and core.outstanding and core.outstanding[0].done:
+            self.eng.at(t, lambda tt, c=core: self.core_step(c, tt))
+
+    def _fill_line(self, core: Core, line: int, dirty: bool):
+        core.llc.insert(line, dirty)
+
+    def _insert_page(self, page: int, t: float):
+        ev = self.local.insert(page)
+        if ev is not None and ev[1]:  # dirty eviction -> writeback
+            self._send_page(ev[0], t, writeback=True)
+
+    # ---------------- miss handling per scheme ----------------
+    def _local_hit(self, core: Core, line: int, wr: bool, t: float) -> None:
+        """DRAM access in local memory: async within the MLP window."""
+        self.m.local_hits += 1
+        self._fill_line(core, line, wr)
+        req = self._mk_req(core, line, wr, t)
+        self.eng.at(t + self.cfg.mem_lat, lambda tt: self._complete(req, tt))
+
+    def miss(self, core: Core, line: int, wr: bool, t: float) -> Optional[float]:
+        cfg = self.cfg
+        scheme = self.scheme
+        page = self.page_of(line)
+
+        if scheme == "local":
+            self._local_hit(core, line, wr, t)
+            return None
+
+        if scheme == "cacheline":
+            self.m.remote_misses += 1
+            req = self._mk_req(core, line, wr, t)
+            self._fetch_line(line, t, req)
+            return None
+
+        # page-based schemes check local memory first
+        if self.local.access(page, wr):
+            self._local_hit(core, line, wr, t)
+            return None
+
+        self.m.remote_misses += 1
+
+        if scheme == "page_free":
+            self._insert_page(page, t)
+            self.m.pages_moved += 1
+            self.m.local_hits -= 1  # counted as remote, not a local hit
+            self._local_hit(core, line, wr, t)
+            return None
+
+        if scheme == "page":
+            req = self._mk_req(core, line, wr, t)
+            if page in self.pending_pages:
+                self.pending_pages[page].append(req)
+            else:
+                self.pending_pages[page] = [req]
+                self._send_page(page, t)
+            return None
+
+        if scheme == "both":
+            req = self._mk_req(core, line, wr, t)
+            self._fetch_line(line, t, req)
+            if page not in self.pending_pages:
+                self.pending_pages[page] = []
+                self._send_page(page, t)
+            return None
+
+        if scheme == "daemon":
+            return self._daemon_miss(core, line, wr, t)
+
+        raise ValueError(scheme)
+
+    def _mk_req(self, core: Core, line: int, wr: bool, t: float) -> Request:
+        req = Request(line, t, wr, core)
+        if not wr:
+            core.outstanding.append(req)
+        return req
+
+    # ---------------- transfers ----------------
+    def _fetch_line(self, line: int, t: float, req: Optional[Request] = None):
+        """Line fetch: request flight + MC read + downlink queue + flight."""
+        cfg = self.cfg
+        lst = self.pending_lines.get(line)
+        if lst is not None:  # coalesce with the inflight fetch
+            if req is not None:
+                lst.append(req)
+            return
+        self.pending_lines[line] = [req] if req is not None else []
+        self.m.lines_moved += 1
+        page = self.page_of(line)
+        link = self.links[self.mc_of(page)]
+        size = cfg.line_bytes + cfg.header_bytes
+        depart_mc = t + cfg.net_lat + cfg.remote_mem_lat
+
+        def on_tx_done(tt: float):
+            arrive = tt + cfg.net_lat
+            self.eng.at(arrive, lambda a: self._on_line_arrival(line, a))
+
+        self.eng.at(depart_mc, lambda tt: link.send(tt, size, on_tx_done, "line"))
+        self.m.net_bytes += size
+
+    def _send_page(self, page: int, t: float, writeback: bool = False):
+        cfg = self.cfg
+        link = self.links[self.mc_of(page)]
+        raw = cfg.page_bytes + cfg.header_bytes
+        size = raw
+        extra = 0.0
+        # Link compression (paper §3-III): engaged when the inflight page
+        # buffer signals congestion (bandwidth-bound regime).  The compressor
+        # is streaming, so only the pipeline fill (~1/4 of the full pass)
+        # sits on the critical path; the rest overlaps transmission.
+        _, pu = self._buf_utils()
+        if self.scheme == "daemon" and cfg.compress and pu > self.PAGE_FAST:
+            ratio = self.comp_ratio()
+            size = cfg.page_bytes / ratio + cfg.header_bytes
+            extra = cfg.comp_lat / 4
+            self.m.bytes_saved_compression += raw - size
+        self.m.net_bytes += size
+        if writeback:
+            depart = t + extra  # compressed at the CC, then uplink (modeled on link)
+            self.eng.at(depart, lambda tt: link.send(tt, size, lambda a: None, "page"))
+            return
+        self.m.pages_moved += 1
+        depart_mc = t + cfg.net_lat + cfg.remote_mem_lat + extra
+
+        def on_tx_done(tt: float):
+            arrive = tt + cfg.net_lat + (cfg.decomp_lat / 4 if extra else 0.0)
+            self.eng.at(arrive, lambda a: self._on_page_arrival(page, a))
+
+        self.eng.at(depart_mc, lambda tt: link.send(tt, size, on_tx_done, "page"))
+
+    # ---------------- arrivals ----------------
+    def _on_line_arrival(self, line: int, t: float):
+        reqs = self.pending_lines.pop(line, [])
+        for r in reqs:
+            if not r.done:
+                self._fill_line(r.core, line, r.write)
+                self._complete(r, t)
+        self._drain_retry(t)
+
+    def _on_page_arrival(self, page: int, t: float):
+        self._insert_page(page, t)
+        reqs = self.pending_pages.pop(page, [])
+        for r in reqs:
+            if not r.done:
+                self._fill_line(r.core, r.addr, r.write)
+                self._complete(r, t + self.cfg.mem_lat)  # read from local memory
+        self._drain_retry(t)
+
+    # ---------------- DaeMon ----------------
+    def _buf_utils(self) -> Tuple[float, float]:
+        lu = len(self.pending_lines) / self.cfg.inflight_lines
+        pu = len(self.pending_pages) / self.cfg.inflight_pages
+        return lu, pu
+
+    PAGE_FAST = 0.3  # inflight-page utilization below which pages drain fast
+
+    def _daemon_miss(self, core: Core, line: int, wr: bool, t: float) -> Optional[float]:
+        """Selection unit (paper §3-II): choose line / page / both from the
+        inflight buffer utilizations.  When the page buffer drains fast
+        (compressed pages, page-friendly phase) skip redundant line races;
+        when it backs up (low locality), favor lines and throttle pages."""
+        cfg = self.cfg
+        page = self.page_of(line)
+        req = self._mk_req(core, line, wr, t)
+        lu, pu = self._buf_utils()
+        pages_fast = pu <= self.PAGE_FAST
+
+        # coalesce with an inflight page migration; race a line only when the
+        # page queue is congested (the line is the critical-path fast path)
+        if page in self.pending_pages:
+            self.pending_pages[page].append(req)
+            if line in self.pending_lines:
+                self.pending_lines[line].append(req)
+            elif not pages_fast and lu < 1.0:
+                self.pending_lines[line] = [req]
+                self._fetch_line_daemon(line, t, req)
+            return None
+
+        # triggering miss: BOTH by default — the line hides page queueing and
+        # (de)compression latency, costing only ~80B next to a ~2KB page
+        issue_page = pu < cfg.page_throttle_hi
+        issue_line = lu < 1.0 or line in self.pending_lines
+        if not issue_line and not issue_page:
+            self.retry.append(req)  # buffers full: re-issue when one drains
+            return None
+
+        if issue_line:
+            if line in self.pending_lines:
+                self.pending_lines[line].append(req)
+            else:
+                self.pending_lines[line] = [req]
+                self._fetch_line_daemon(line, t, req)
+        if issue_page:
+            self.pending_pages.setdefault(page, []).append(req)
+            self._send_page(page, t)
+        return None
+
+    def _fetch_line_daemon(self, line: int, t: float, req: Request):
+        cfg = self.cfg
+        self.m.lines_moved += 1
+        page = self.page_of(line)
+        link = self.links[self.mc_of(page)]
+        size = cfg.line_bytes + cfg.header_bytes
+        self.m.net_bytes += size
+        depart_mc = t + cfg.net_lat + cfg.remote_mem_lat
+
+        def on_tx_done(tt: float):
+            arrive = tt + cfg.net_lat
+            self.eng.at(arrive, lambda a: self._on_line_arrival(line, a))
+
+        self.eng.at(depart_mc, lambda tt: link.send(tt, size, on_tx_done, "line"))
+
+    def _drain_retry(self, t: float):
+        n = len(self.retry)
+        for _ in range(n):
+            req = self.retry.popleft()
+            if req.done:
+                continue
+            line = req.addr
+            lu, pu = self._buf_utils()
+            page = self.page_of(line)
+            if line in self.pending_lines:
+                self.pending_lines[line].append(req)
+            elif page in self.pending_pages:
+                self.pending_pages[page].append(req)
+            elif lu < 1.0:
+                self.pending_lines[line] = [req]
+                self._fetch_line_daemon(line, t, req)
+            elif pu < self.cfg.page_throttle_hi:
+                self.pending_pages[page] = [req]
+                self._send_page(page, t)
+            else:
+                self.retry.append(req)
+
+    # ---------------- run ----------------
+    def run(self) -> Metrics:
+        self.start()
+        self.eng.run()
+        self.m.cycles = max(c.t_end for c in self.cores)
+        return self.m
+
+
+def simulate(
+    cfg: SimConfig, scheme: str, traces: List[Trace], workload: str = "", seed: int = 0
+) -> Metrics:
+    return Simulator(cfg, scheme, traces, workload, seed).run()

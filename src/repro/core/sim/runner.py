@@ -1,0 +1,142 @@
+"""Public simulation API + the paper's experiment sweeps.
+
+  run_one(workload, scheme, ...)          -> Metrics
+  fig2(...)   scheme x workload grid      (paper Fig. 2)
+  fig4_top(...) bw x n_mcs x workload     (paper Fig. 4 top)
+  fig4_bottom(...) multi-job interference (paper Fig. 4 bottom)
+  paper_claims(...) geomean speedups of daemon over page
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, List, Optional
+
+from repro.core.sim.config import SCHEMES, Metrics, SimConfig
+from repro.core.sim.engine import simulate
+from repro.core.sim.trace import WORKLOADS, generate
+
+DEFAULT_WORKLOADS = tuple(WORKLOADS)
+
+
+def run_one(
+    workload: str,
+    scheme: str,
+    cfg: Optional[SimConfig] = None,
+    *,
+    seed: int = 0,
+    n_accesses: int = 60_000,
+    footprint: int = 16 << 20,
+    n_jobs: int = 1,
+) -> Metrics:
+    """One application = cfg.n_cores threads of the workload (multicore CC);
+    n_jobs > 1 stacks additional independent applications on the same CC."""
+    cfg = cfg or SimConfig()
+    n_threads = max(1, cfg.n_cores) * max(1, n_jobs)
+    per = max(1, n_accesses // n_threads)
+    traces = [generate(workload, seed=seed + j, footprint=footprint, n=per)
+              for j in range(n_threads)]
+    return simulate(cfg, scheme, traces, workload=workload, seed=seed)
+
+
+def geomean(xs: Iterable[float]) -> float:
+    xs = [max(x, 1e-12) for x in xs]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def fig2(
+    cfg: Optional[SimConfig] = None,
+    workloads: Iterable[str] = DEFAULT_WORKLOADS,
+    schemes: Iterable[str] = SCHEMES,
+    **kw,
+) -> Dict[str, Dict[str, Metrics]]:
+    """Slowdown grid: scheme x workload (normalize to 'local' outside)."""
+    out: Dict[str, Dict[str, Metrics]] = {}
+    for w in workloads:
+        out[w] = {s: run_one(w, s, cfg, **kw) for s in schemes}
+    return out
+
+
+def slowdowns(grid: Dict[str, Dict[str, Metrics]]) -> Dict[str, Dict[str, float]]:
+    """cycles(scheme)/cycles(local) per workload."""
+    out = {}
+    for w, row in grid.items():
+        base = row["local"].cycles
+        out[w] = {s: m.cycles / base for s, m in row.items()}
+    return out
+
+
+def fig4_top(
+    workloads: Iterable[str] = ("pr", "dr", "st", "nw"),
+    bw_fracs: Iterable[float] = (0.5, 0.25, 0.125),
+    n_mcs_list: Iterable[int] = (1, 2, 4),
+    **kw,
+) -> List[dict]:
+    """Speedup of daemon over page across network/MC configurations."""
+    rows = []
+    for w in workloads:
+        for bw in bw_fracs:
+            for n_mcs in n_mcs_list:
+                cfg = SimConfig(link_bw_frac=bw, n_mcs=n_mcs)
+                mp = run_one(w, "page", cfg, **kw)
+                md = run_one(w, "daemon", cfg, **kw)
+                rows.append(
+                    {
+                        "workload": w,
+                        "bw_frac": bw,
+                        "n_mcs": n_mcs,
+                        "speedup": mp.cycles / md.cycles,
+                        "access_cost_ratio": mp.avg_access_cost / max(md.avg_access_cost, 1e-9),
+                        "net_bytes_ratio": mp.net_bytes / max(md.net_bytes, 1e-9),
+                    }
+                )
+    return rows
+
+
+def fig4_bottom(
+    workloads: Iterable[str] = ("pr", "dr", "st", "nw"),
+    n_jobs: int = 4,
+    **kw,
+) -> List[dict]:
+    """Multiple concurrent jobs on one CC sharing the network and one MC."""
+    rows = []
+    for w in workloads:
+        mp = run_one(w, "page", n_jobs=n_jobs, **kw)
+        md = run_one(w, "daemon", n_jobs=n_jobs, **kw)
+        rows.append(
+            {
+                "workload": w,
+                "n_jobs": n_jobs,
+                "speedup": mp.cycles / md.cycles,
+                "access_cost_ratio": mp.avg_access_cost / max(md.avg_access_cost, 1e-9),
+            }
+        )
+    return rows
+
+
+def paper_claims(
+    bw_fracs: Iterable[float] = (0.25, 0.125), **kw
+) -> dict:
+    """Geomean daemon-vs-page improvements over the workload suite across the
+    paper's network operating range — the quantities the paper reports as
+    3.06x (access-cost reduction) and 2.39x (performance)."""
+    perf, cost, per_bw = [], [], {}
+    for bw in bw_fracs:
+        cfg = SimConfig(link_bw_frac=bw)
+        grid = fig2(cfg, schemes=("page", "daemon"), **kw)
+        p = [row["page"].cycles / row["daemon"].cycles for row in grid.values()]
+        c = [
+            row["page"].avg_access_cost / max(row["daemon"].avg_access_cost, 1e-9)
+            for row in grid.values()
+        ]
+        per_bw[bw] = {
+            "perf": geomean(p),
+            "cost": geomean(c),
+            "per_workload": {w: grid[w]["page"].cycles / grid[w]["daemon"].cycles for w in grid},
+        }
+        perf += p
+        cost += c
+    return {
+        "perf_speedup_geomean": geomean(perf),
+        "access_cost_reduction_geomean": geomean(cost),
+        "per_bw": per_bw,
+    }

@@ -1,0 +1,153 @@
+"""Synthetic workload trace generators modeled on the paper's evaluation
+domains (graph processing, HPC, data analytics, bioinformatics, ML).
+
+A trace is three parallel numpy arrays:
+    gaps:  int32 compute cycles between consecutive memory accesses
+    addrs: int64 byte addresses
+    writes: bool
+
+All generators are deterministic (seeded) and parameterized by footprint so
+the local-memory fraction is meaningful.  Locality spans the spectrum the
+paper stresses: pointer-chase (dr/pf-like, no locality) .. streaming (page
+locality ~64 lines/page).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+Trace = Tuple[np.ndarray, np.ndarray, np.ndarray]
+
+DEFAULT_FOOTPRINT = 32 << 20  # 32 MiB
+DEFAULT_ACCESSES = 120_000
+
+# Per-workload page compressibility (ratio ~ N(mean, 0.15*mean), >= 1):
+# graphs/int data compress well; float/ML data less [paper §3(III)].
+COMPRESSIBILITY = {
+    "pr": 3.0, "bf": 3.0, "ts": 2.0, "nw": 2.5,
+    "dr": 1.8, "pf": 2.2, "st": 4.0, "ml": 1.5,
+}
+
+
+def _mk(gaps, addrs, writes, footprint) -> Trace:
+    return (
+        np.asarray(gaps, np.int64),
+        np.asarray(addrs, np.int64) % footprint,
+        np.asarray(writes, bool),
+    )
+
+
+def ptr_chase(seed: int, footprint: int, n: int) -> Trace:
+    """dr (delaunay-refinement-like): random cavity walks — jump to a random
+    element record, touch 3 consecutive lines, hop.  Low page locality with
+    small bursts (capacity-intensive irregular, the paper's dominant class)."""
+    rng = np.random.default_rng(seed)
+    run = 3  # lines per visited record
+    n_runs = n // run + 1
+    starts = rng.integers(0, footprint, n_runs) & ~63
+    offs = (np.arange(run) * 64)[None, :]
+    addrs = (starts[:, None] + offs).reshape(-1)[:n]
+    writes = rng.random(n) < 0.2
+    gaps = rng.integers(15, 40, n)
+    return _mk(gaps, addrs, writes, footprint)
+
+
+def pagerank(seed: int, footprint: int, n: int) -> Trace:
+    """pr: irregular graph access —near-uniform random edge/vertex loads with a
+    thin sequential rank stream.  LOW page locality: the paper's line-friendly
+    class (moving 4 KiB to use 64 B)."""
+    rng = np.random.default_rng(seed)
+    rand = rng.integers(0, footprint * 7 // 8, n) & ~63
+    seq = (np.arange(n) * 64) % (footprint // 8) + footprint * 7 // 8
+    addrs = np.where(rng.random(n) < 0.85, rand, seq)
+    writes = rng.random(n) < 0.15
+    gaps = rng.integers(15, 40, n)
+    return _mk(gaps, addrs, writes, footprint)
+
+
+def bfs(seed: int, footprint: int, n: int) -> Trace:
+    """bf: frontier bursts — short sequential runs at random page locations."""
+    rng = np.random.default_rng(seed)
+    run = 8
+    n_runs = n // run
+    starts = rng.integers(0, footprint, n_runs) & ~63
+    offs = (np.arange(run) * 64)[None, :]
+    addrs = (starts[:, None] + offs).reshape(-1)[:n]
+    gaps = rng.integers(10, 30, n)
+    return _mk(gaps, addrs, np.zeros(n, bool), footprint)
+
+
+def streaming(seed: int, footprint: int, n: int) -> Trace:
+    """st (data-analytics scan): fully sequential — maximal page locality."""
+    rng = np.random.default_rng(seed)
+    addrs = (np.arange(n) * 64) % footprint
+    gaps = rng.integers(8, 20, n)
+    writes = rng.random(n) < 0.1
+    return _mk(gaps, addrs, writes, footprint)
+
+
+def nw(seed: int, footprint: int, n: int) -> Trace:
+    """nw (bioinformatics DP): anti-diagonal wavefront — consecutive cells
+    stride by ~a row, touching ONE line per page before moving on.  The
+    paper's other line-friendly workload."""
+    rng = np.random.default_rng(seed)
+    row_bytes = 1 << 14  # 16 KiB rows: stride skips 4 pages per step
+    i = np.arange(n, dtype=np.int64)
+    addrs = (i * (row_bytes + 64)) % footprint
+    writes = rng.random(n) < 0.3
+    gaps = rng.integers(12, 30, n)
+    return _mk(gaps, addrs, writes, footprint)
+
+
+def hash_join(seed: int, footprint: int, n: int) -> Trace:
+    """ts (analytics): sequential probe stream + random hash-table lookups."""
+    rng = np.random.default_rng(seed)
+    seq = (np.arange(n) * 64) % (footprint // 2)
+    ht = rng.integers(footprint // 2, footprint, n) & ~63
+    addrs = np.where(np.arange(n) % 2 == 0, seq, ht)
+    gaps = rng.integers(10, 25, n)
+    return _mk(gaps, addrs, np.zeros(n, bool), footprint)
+
+
+def kmeans(seed: int, footprint: int, n: int) -> Trace:
+    """ml (embedding/recsys): random embedding-row gathers (2 lines each)
+    plus a thin sequential activation stream — sparse, capacity-intensive."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, footprint * 7 // 8 >> 7, n) << 7  # 128B rows
+    row_burst = rows + (np.arange(n) % 2) * 64
+    seq = (np.arange(n) * 64) % (footprint // 8) + footprint * 7 // 8
+    addrs = np.where(rng.random(n) < 0.85, row_burst, seq)
+    gaps = rng.integers(15, 35, n)
+    return _mk(gaps, addrs, np.zeros(n, bool), footprint)
+
+
+def pf(seed: int, footprint: int, n: int) -> Trace:
+    """pf (particle filter): sequential weight scan (page-friendly phase)
+    interleaved with random ancestor gathers (resampling) — mixed locality."""
+    rng = np.random.default_rng(seed)
+    i = np.arange(n)
+    seq = ((i // 128) * 4096 + (i % 128) * 32) % (footprint // 2)
+    rnd = (rng.integers(footprint // 2, footprint, n) & ~63)
+    addrs = np.where(rng.random(n) < 0.65, seq, rnd)
+    gaps = rng.integers(8, 18, n)
+    writes = rng.random(n) < 0.2
+    return _mk(gaps, addrs, writes, footprint)
+
+
+WORKLOADS: Dict[str, Callable[[int, int, int], Trace]] = {
+    "pr": pagerank,
+    "bf": bfs,
+    "ts": hash_join,
+    "nw": nw,
+    "dr": ptr_chase,
+    "pf": pf,
+    "st": streaming,
+    "ml": kmeans,
+}
+
+
+def generate(name: str, *, seed: int = 0, footprint: int = DEFAULT_FOOTPRINT,
+             n: int = DEFAULT_ACCESSES) -> Trace:
+    return WORKLOADS[name](seed, footprint, n)

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the perf-critical layers (validated in interpret
+# mode against ref.py oracles on CPU; native on TPU):
+#   block_quant     — DaeMon link compression (per-block absmax int8)
+#   flash_attention — online-softmax attention (causal / SWA / GQA)
+#   mamba_scan      — chunked selective scan (SSM archs)
+from repro.kernels import block_quant, flash_attention, mamba_scan
+
+__all__ = ["block_quant", "flash_attention", "mamba_scan"]

@@ -1,0 +1,60 @@
+"""jit'd public wrappers for block quantization.
+
+On TPU the Pallas kernel runs natively; elsewhere (this CPU container, and
+inside the dry-run so cost_analysis stays transparent) the pure-jnp reference
+path is used — numerically identical (tests assert exact equality).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_quant import ref
+from repro.kernels.block_quant.block_quant import (
+    BLOCK, dequantize_pallas, quantize_pallas,
+)
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("block", "use_kernel", "interpret"))
+def quantize(x: jax.Array, block: int = BLOCK, *, use_kernel: bool = False,
+             interpret: bool = False):
+    """Flattens to 2-D (rows, C), quantizes per block along the last axis."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1]) if x.ndim != 2 else x
+    if (use_kernel or _on_tpu()) and block == BLOCK and x2.shape[-1] % BLOCK == 0:
+        q, s = quantize_pallas(x2, interpret=interpret)
+    else:
+        q, s = ref.quantize_ref(x2, block)
+    return q.reshape(shape), s.reshape(*shape[:-1], shape[-1] // block)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "use_kernel", "interpret"))
+def dequantize(q: jax.Array, scales: jax.Array, dtype=jnp.float32, *,
+               use_kernel: bool = False, interpret: bool = False):
+    shape = q.shape
+    q2 = q.reshape(-1, shape[-1]) if q.ndim != 2 else q
+    s2 = scales.reshape(q2.shape[0], -1)
+    if (use_kernel or _on_tpu()) and q2.shape[-1] % BLOCK == 0 and (
+        q2.shape[-1] // s2.shape[-1] == BLOCK
+    ):
+        x = dequantize_pallas(q2, s2, dtype, interpret=interpret)
+    else:
+        x = ref.dequantize_ref(q2, s2, dtype)
+    return x.reshape(shape)
+
+
+def wire_bytes(shape, dtype_bytes: int = 2, block: int = BLOCK) -> int:
+    """Compressed wire size: int8 payload + f32 scale per block."""
+    import numpy as np
+
+    n = int(np.prod(shape))
+    return n + 4 * (n // block)

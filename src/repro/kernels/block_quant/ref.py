@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for per-block absmax int8 quantization (link compression).
+
+Blocks are contiguous runs of ``block`` elements along the last axis; each
+block gets one f32 scale (absmax / 127).  Wire format = int8 payload + f32
+scales: 4096 B bf16 -> 2048 + 64 B  (~1.94x reduction incl. scales).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jnp.ndarray, block: int = 128):
+    """x: (..., C) with C % block == 0 -> (q int8 (..., C), scales f32 (..., C/block))."""
+    orig_shape = x.shape
+    c = orig_shape[-1]
+    assert c % block == 0, (c, block)
+    xb = x.astype(jnp.float32).reshape(*orig_shape[:-1], c // block, block)
+    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = absmax / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(xb / safe), -127, 127).astype(jnp.int8)
+    return q.reshape(orig_shape), scale[..., 0].astype(jnp.float32)
+
+
+def dequantize_ref(q: jnp.ndarray, scales: jnp.ndarray, dtype=jnp.float32):
+    """Inverse of quantize_ref."""
+    orig_shape = q.shape
+    c = orig_shape[-1]
+    block = c // scales.shape[-1]
+    qb = q.reshape(*orig_shape[:-1], scales.shape[-1], block).astype(jnp.float32)
+    x = qb * scales[..., None]
+    return x.reshape(orig_shape).astype(dtype)

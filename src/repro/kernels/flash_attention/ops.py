@@ -1,0 +1,26 @@
+"""jit'd wrapper for flash attention: Pallas on TPU (or interpret mode for
+validation); the memory-bounded chunked-jnp path otherwise."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "use_kernel", "interpret", "bq", "bk")
+)
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    use_kernel: bool = False, interpret: bool = False,
+                    bq: int = 128, bk: int = 128):
+    if use_kernel or jax.default_backend() == "tpu":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+            interpret=interpret or jax.default_backend() != "tpu",
+        )
+    from repro.models import nn
+
+    return nn.attention(q, k, v, causal=causal, window=window)

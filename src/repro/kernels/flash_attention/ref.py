@@ -1,0 +1,28 @@
+"""Naive full-materialization attention oracle (causal / sliding-window /
+GQA) — the ground truth for the Pallas flash kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, Sq, H, D); k, v: (B, Skv, KVH, D).  f32 softmax."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores /= jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: chunked selective scan (Mamba1-style recurrence).
+
+Grid = (B, D / TD, S / CHUNK) with the sequence-chunk axis innermost and
+sequential: the SSM state h (TD, N) persists in VMEM scratch across chunk
+steps (reset at chunk 0).  Within a chunk the recurrence is unrolled as a
+fori_loop over time steps on VPU-resident (TD, N) tiles — the working set
+(CHUNK x TD inputs + TD x N state) stays in VMEM, which is the kernel-level
+analogue of the chunked lax.scan the XLA path uses (models/mamba.py).
+
+Discretization (da = exp(dt*A), dbx = dt*x*B) happens in-kernel so the big
+(S, D, N) tensors are never materialized in HBM — on TPU this kernel turns
+the SSM layer from HBM-bound to VMEM-resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 128  # time steps per grid step
+TILE_D = 256  # channels per grid step
+
+
+def _scan_kernel(dt_ref, a_ref, b_ref, c_ref, x_ref, y_ref, hlast_ref, h_scr, *,
+                 chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    dt = dt_ref[0].astype(jnp.float32)  # (CHUNK, TD)
+    a = a_ref[...].astype(jnp.float32)  # (TD, N)
+    bm = b_ref[0].astype(jnp.float32)  # (CHUNK, N)
+    cm = c_ref[0].astype(jnp.float32)  # (CHUNK, N)
+    x = x_ref[0].astype(jnp.float32)  # (CHUNK, TD)
+
+    def step(t, carry):
+        h, ys = carry
+        da_t = jnp.exp(dt[t][:, None] * a)  # (TD, N)
+        dbx_t = (dt[t] * x[t])[:, None] * bm[t][None, :]  # (TD, N)
+        h = da_t * h + dbx_t
+        y_t = jnp.sum(h * cm[t][None, :], axis=-1)  # (TD,)
+        ys = jax.lax.dynamic_update_slice(ys, y_t[None, :], (t, 0))
+        return h, ys
+
+    h0 = h_scr[...]
+    ys0 = jnp.zeros((chunk, dt.shape[1]), jnp.float32)
+    h_out, ys = jax.lax.fori_loop(0, chunk, step, (h0, ys0))
+    h_scr[...] = h_out
+    y_ref[0] = ys
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        hlast_ref[0] = h_out
+
+
+def selective_scan_pallas(dt, a, bmat, cmat, x, *, chunk: int = CHUNK,
+                          tile_d: int = TILE_D, interpret: bool = False):
+    """dt,x: (B,S,D); a: (D,N); bmat,cmat: (B,S,N) -> (y (B,S,D) f32, h_last (B,D,N))."""
+    b, s, d = dt.shape
+    n = a.shape[1]
+    chunk = min(chunk, s)
+    tile_d = min(tile_d, d)
+    assert s % chunk == 0 and d % tile_d == 0, (s, chunk, d, tile_d)
+    n_chunks = s // chunk
+    grid = (b, d // tile_d, n_chunks)
+
+    kern = functools.partial(_scan_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, h_last = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, tile_d), lambda bi, di, ci: (bi, ci, di)),  # dt
+            pl.BlockSpec((tile_d, n), lambda bi, di, ci: (di, 0)),  # a
+            pl.BlockSpec((1, chunk, n), lambda bi, di, ci: (bi, ci, 0)),  # B
+            pl.BlockSpec((1, chunk, n), lambda bi, di, ci: (bi, ci, 0)),  # C
+            pl.BlockSpec((1, chunk, tile_d), lambda bi, di, ci: (bi, ci, di)),  # x
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, tile_d), lambda bi, di, ci: (bi, ci, di)),
+            pl.BlockSpec((1, tile_d, n), lambda bi, di, ci: (bi, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((tile_d, n), jnp.float32)],
+        interpret=interpret,
+    )(dt, a, bmat, cmat, x)
+    return y, h_last

@@ -1,0 +1,22 @@
+"""jit'd wrapper for the selective scan: Pallas kernel on TPU, associative
+chunked-scan jnp path elsewhere (models/mamba.py provides the production XLA
+path; ref.py the sequential oracle)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mamba_scan import ref
+from repro.kernels.mamba_scan.mamba_scan import selective_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def selective_scan(dt, a, bmat, cmat, x, *, use_kernel: bool = False,
+                   interpret: bool = False):
+    if use_kernel or jax.default_backend() == "tpu":
+        return selective_scan_pallas(
+            dt, a, bmat, cmat, x,
+            interpret=interpret or jax.default_backend() != "tpu",
+        )
+    return ref.selective_scan_ref(dt, a, bmat, cmat, x)

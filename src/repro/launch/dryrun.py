@@ -1,0 +1,266 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init).  Everything below is ordinary code.
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import sys  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.models import nn  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+from repro.runtime import sharding as shd  # noqa: E402
+
+"""Multi-pod dry-run: ``lower() + compile()`` every (arch x shape x mesh)
+cell with abstract inputs (ShapeDtypeStruct — no allocation), prove the
+memory fits, and extract the roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --cell train_4k --mesh 16x16
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # every live cell, both meshes
+
+Each --all sub-cell runs in its own subprocess (isolation: one XLA OOM or
+assert cannot take down the batch; also keeps per-compile memory bounded on
+the 1-core CPU container).
+"""
+
+
+def _abstract(specs, dtype):
+    return nn.abstract_params(specs, dtype)
+
+
+def _memory_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return {}
+        out = {}
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            if hasattr(ma, k):
+                out[k] = int(getattr(ma, k))
+        return out
+    except Exception as e:  # XLA:CPU may not implement it
+        return {"error": str(e)}
+
+
+def auto_k(cfg, cell, n_dp: int, reduced: bool) -> int:
+    if reduced:
+        return 1
+    return steps.auto_microbatches(cfg, cell.seq_len, cell.global_batch, n_dp)
+
+
+def run_cell(arch: str, cell_name: str, mesh_spec: str, *, movement: str = "baseline",
+             reduced: bool = False, save_hlo: str = "", fsdp: bool = True,
+             remat: str = "", params_dtype: str = "", microbatches: int = 0,
+             cache_shard: str = "seq", ssm_algo: str = "") -> dict:
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    if remat:
+        cfg = __import__("dataclasses").replace(cfg, remat=remat)
+    if ssm_algo:
+        cfg = __import__("dataclasses").replace(cfg, ssm_algo=ssm_algo)
+    cell = SHAPES[cell_name]
+    if reduced:
+        import dataclasses
+        cell = dataclasses.replace(cell, seq_len=128, global_batch=max(8, len(jax.devices()) // 8))
+
+    mesh = mesh_lib.parse_mesh(mesh_spec)
+    n_dev = mesh.size
+    rules = shd.base_rules(mesh, fsdp=fsdp, cache_shard=cache_shard)
+    shd.activate(mesh, rules)
+
+    rec = {
+        "arch": arch, "cell": cell_name, "mesh": mesh_spec, "kind": cell.kind,
+        "movement": movement, "n_devices": n_dev, "ok": False,
+    }
+    t0 = time.time()
+    try:
+        specs = M.model_specs(cfg)
+        psh = shd.sharding_for_specs(mesh, rules, specs)
+
+        if cell.kind == "train":
+            batch = M.input_specs(cfg, cell)
+            bsh = shd.batch_sharding(mesh, rules, batch)
+            n_dp = n_dev // mesh.shape.get("model", 1)
+            k = microbatches or auto_k(cfg, cell, n_dp, reduced)
+            rec["microbatches"] = k
+            step = steps.make_train_step(cfg, movement=movement, num_microbatches=k)
+            if movement == "daemon":
+                from repro.core import movement as mv
+
+                params = _abstract(specs, jnp.bfloat16)  # working copy on the wire
+                master = _abstract(specs, jnp.float32)
+                opt = mv.init_abstract(master)
+                opt_sh = mv.state_shardings(psh, NamedSharding(mesh, P()))
+            else:
+                pdt = jnp.dtype(params_dtype) if params_dtype else jnp.float32
+                params = _abstract(specs, pdt)
+                opt = adamw.init_abstract(params)
+                opt_sh = adamw.AdamWState(NamedSharding(mesh, P()), psh, psh)
+            jitted = jax.jit(
+                step, in_shardings=(psh, opt_sh, bsh), donate_argnums=(0, 1)
+            )
+            lowered = jitted.lower(params, opt, batch)
+        elif cell.kind == "prefill":
+            params = _abstract(specs, jnp.bfloat16)
+            batch = M.input_specs(cfg, cell)
+            bsh = shd.batch_sharding(mesh, rules, batch)
+            jitted = jax.jit(steps.make_prefill_step(cfg), in_shardings=(psh, bsh))
+            lowered = jitted.lower(params, batch)
+        else:  # decode
+            params = _abstract(specs, jnp.bfloat16)
+            inp = M.input_specs(cfg, cell)
+            csh = shd.sharding_for_specs(mesh, rules, M.cache_specs(cfg, cell.global_batch, cell.seq_len))
+            tok_sh = shd.batch_sharding(mesh, rules, inp["token"])
+            pos_sh = NamedSharding(mesh, P())
+            jitted = jax.jit(
+                steps.make_decode_step(cfg),
+                in_shardings=(psh, csh, tok_sh, pos_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params, inp["cache"], inp["token"], inp["pos"])
+
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        roof, coll = rl.analyze(compiled, n_dev)
+        rec.update(roof.as_dict())
+        rec.update(rl.xla_raw_cost(compiled))
+        rec["collectives"] = {
+            "operand_bytes": coll.operand_bytes,
+            "result_bytes": coll.result_bytes,
+            "counts": coll.counts,
+        }
+        rec["memory_analysis"] = _memory_analysis(compiled)
+        if not reduced:
+            rec["model_flops"] = rl.model_flops(cfg, cell)
+            rec["n_params"] = M.param_count(cfg)
+            rec["n_params_active"] = M.param_count(cfg, active_only=True)
+            if rec["flops"]:
+                # per-device HLO flops x n_dev vs global model flops
+                rec["model_flops_ratio"] = rec["model_flops"] / (rec["flops"] * n_dev)
+        rec["ok"] = True
+
+        if save_hlo:
+            Path(save_hlo).parent.mkdir(parents=True, exist_ok=True)
+            Path(save_hlo).write_text(compiled.as_text())
+
+        print(f"== {arch} / {cell_name} / {mesh_spec} / {movement} ==")
+        print(f"memory_analysis: {rec['memory_analysis']}")
+        print(
+            f"cost_analysis: flops={rec['flops']:.3e} bytes={rec['hbm_bytes']:.3e} "
+            f"coll={rec['collective_bytes']:.3e}"
+        )
+        print(
+            f"terms: compute={rec['t_compute_s']:.4f}s memory={rec['t_memory_s']:.4f}s "
+            f"collective={rec['t_collective_s']:.4f}s -> {rec['bottleneck']}"
+        )
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"== {arch} / {cell_name} / {mesh_spec} FAILED: {rec['error']}", file=sys.stderr)
+    finally:
+        shd.deactivate()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--cell", default="")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--movement", default="baseline", choices=["baseline", "daemon"])
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--remat", default="")
+    ap.add_argument("--params-dtype", default="")
+    ap.add_argument("--microbatches", type=int, default=0, help="0 = auto")
+    ap.add_argument("--cache-shard", default="seq", choices=["seq", "dh"])
+    ap.add_argument("--ssm-algo", default="", choices=["", "scan", "ssd"])
+    ap.add_argument("--save-hlo", default="")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--all", action="store_true", help="run every live cell x both meshes via subprocesses")
+    ap.add_argument("--archs", default="", help="comma list filter for --all")
+    args = ap.parse_args()
+
+    if args.all:
+        import subprocess
+
+        from repro.configs import ARCHS
+
+        outdir = Path(args.out)
+        outdir.mkdir(parents=True, exist_ok=True)
+        archs = args.archs.split(",") if args.archs else list(ARCHS)
+        jobs = []
+        for arch in archs:
+            cfg = get_config(arch)
+            for cell in cfg.live_cells():
+                for mesh_spec in ("16x16", "2x16x16"):
+                    jobs.append((arch, cell.name, mesh_spec))
+        failures = 0
+        for i, (arch, cell, mesh_spec) in enumerate(jobs):
+            tag = f"{arch}_{cell}_{mesh_spec}_{args.movement}"
+            outfile = outdir / f"{tag}.json"
+            if outfile.exists() and json.loads(outfile.read_text()).get("ok"):
+                print(f"[{i+1}/{len(jobs)}] {tag}: cached ok")
+                continue
+            hlo_dir = outdir.parent / "hlo"
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--cell", cell, "--mesh", mesh_spec,
+                "--movement", args.movement, "--out", str(outdir),
+                "--save-hlo", str(hlo_dir / f"{tag}.hlo"),
+            ]
+            if args.no_fsdp:
+                cmd.append("--no-fsdp")
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            ok = outfile.exists() and json.loads(outfile.read_text()).get("ok")
+            failures += 0 if ok else 1
+            print(
+                f"[{i+1}/{len(jobs)}] {tag}: {'ok' if ok else 'FAIL'} ({time.time()-t0:.0f}s)",
+                flush=True,
+            )
+            if not ok:
+                sys.stderr.write((r.stdout or "")[-2000:] + (r.stderr or "")[-3000:] + "\n")
+        print(f"dry-run batch done: {len(jobs) - failures}/{len(jobs)} ok")
+        sys.exit(1 if failures else 0)
+
+    rec = run_cell(
+        args.arch, args.cell, args.mesh, movement=args.movement,
+        reduced=args.reduced, save_hlo=args.save_hlo, fsdp=not args.no_fsdp,
+        remat=args.remat, params_dtype=args.params_dtype,
+        microbatches=args.microbatches, cache_shard=args.cache_shard,
+        ssm_algo=args.ssm_algo,
+    )
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    tag = f"{args.arch}_{args.cell}_{args.mesh}_{args.movement}"
+    if args.reduced:
+        tag += "_reduced"
+    (outdir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    sys.exit(0 if rec.get("ok") else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,222 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms, all in *seconds per step, per chip* (TPU v5e constants):
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = collective_operand_bytes_per_device / ICI_BW
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are NOT
+in cost_analysis, so we parse the post-SPMD HLO (``compiled.as_text()``),
+build a symbol table of every op's result shape, and sum the operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops (shapes in the partitioned module are per-device).  We also report a
+ring-wire estimate (all-reduce counts 2x) for context.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# ---- TPU v5e hardware constants (per chip) --------------------------------
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+# result definition:  %name = TYPE[dims]{layout} opcode(
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?)([a-z0-9]+)\[([\d,]*)\]"
+)
+_TUPLE_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OPCODE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s*([\w\-]+)(?:\.\d+)?\("
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _line_result_bytes(line: str) -> Optional[int]:
+    """Total bytes of the result (handles tuple-shaped results)."""
+    m = _DEF_RE.match(line)
+    if not m:
+        return None
+    if m.group(2) == "(":  # tuple result: sum all component shapes up to ') '
+        close = line.find(") ", m.start())
+        seg = line[m.start() : close if close != -1 else len(line)]
+        return sum(_shape_bytes(d, s) for d, s in _TUPLE_SHAPE_RE.findall(seg))
+    return _shape_bytes(m.group(3), m.group(4))
+
+
+@dataclass
+class CollectiveStats:
+    operand_bytes: Dict[str, int] = field(default_factory=dict)  # kind -> bytes
+    result_bytes: Dict[str, int] = field(default_factory=dict)
+    counts: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    def wire_bytes(self) -> int:
+        """Ring estimate: all-reduce moves ~2x its operand; others ~1x."""
+        total = 0
+        for kind, b in self.operand_bytes.items():
+            total += 2 * b if kind == "all-reduce" else b
+        return total
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    # 1. symbol table: op name -> result bytes
+    table: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            b = _line_result_bytes(line)
+            if b is not None:
+                table[m.group(1)] = b
+
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-start(" in line or "-done(" in line:
+            # async pairs: count only the -start (has the operands)
+            if "-done(" in line:
+                continue
+        kind = None
+        for k in COLLECTIVE_KINDS:
+            if f" {k}(" in line or f" {k}-start(" in line:
+                kind = k
+                break
+        if kind is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        # operand list: %refs inside the call parens
+        call = line.split("(", 1)[1] if "(" in line else ""
+        refs = re.findall(r"%([\w.\-]+)", call)
+        ob = sum(table.get(r, 0) for r in refs)
+        if ob == 0:  # fallback: use result bytes
+            ob = _line_result_bytes(line) or 0
+        stats.operand_bytes[kind] = stats.operand_bytes.get(kind, 0) + ob
+        stats.result_bytes[kind] = stats.result_bytes.get(kind, 0) + (_line_result_bytes(line) or 0)
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device bytes accessed
+    collective_bytes: float  # per-device collective operand bytes
+    wire_bytes: float
+    n_devices: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "wire_bytes": self.wire_bytes,
+            "n_devices": self.n_devices,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def analyze(compiled, n_devices: int) -> Tuple[Roofline, CollectiveStats]:
+    """Trip-count-corrected terms (see hlo_cost.py: XLA's cost_analysis counts
+    scan bodies once; we re-derive flops/bytes/collectives from the HLO with
+    known_trip_count multiplication).  XLA's raw numbers are kept alongside
+    for reference."""
+    from repro.launch import hlo_cost
+
+    text = compiled.as_text()
+    corrected = hlo_cost.analyze_text(text)
+    stats = CollectiveStats(
+        operand_bytes={k: int(v) for k, v in corrected["collective_bytes"].items()},
+        result_bytes={},
+        counts=dict(corrected["collective_counts"]),
+    )
+    rl = Roofline(
+        flops=float(corrected["flops"]),
+        hbm_bytes=float(corrected["hbm_bytes"]),
+        collective_bytes=float(stats.total_operand_bytes),
+        wire_bytes=float(stats.wire_bytes()),
+        n_devices=n_devices,
+    )
+    return rl, stats
+
+
+def xla_raw_cost(compiled) -> Dict[str, float]:
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        return {
+            "xla_flops_raw": float(cost.get("flops", 0.0)),
+            "xla_bytes_raw": float(cost.get("bytes accessed", 0.0)),
+        }
+    except Exception:
+        return {}
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens/step.
+    For decode cells D = global_batch (one token each); attention extra
+    ~12*L*d_head*H*S*D is NOT counted (keeps the published convention)."""
+    from repro.models import model as M
+
+    n = M.param_count(cfg, active_only=(cfg.family == "moe"))
+    if cell.kind == "train":
+        d = cell.global_batch * cell.seq_len
+        return 6.0 * n * d
+    if cell.kind == "prefill":
+        d = cell.global_batch * cell.seq_len
+        return 2.0 * n * d  # forward only
+    d = cell.global_batch  # decode: one token per sequence
+    return 2.0 * n * d

@@ -1,0 +1,3 @@
+from repro.models import model, nn
+
+__all__ = ["model", "nn"]

@@ -1,0 +1,150 @@
+"""Whisper-style encoder-decoder backbone.  The conv/mel frontend is a STUB
+per the assignment: ``input_specs()`` feeds precomputed frame embeddings
+(B, S, d_model) straight into the encoder.  Sinusoidal positions, MHA,
+pre-norm blocks; decoder has causal self-attention (cached at decode) and
+cross-attention over encoder states (K/V cached once at prefill).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn, transformer
+from repro.models.nn import ParamSpec
+
+
+def cross_attn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    return {
+        "wq": ParamSpec((d, h * dh), ("embed", "heads")),
+        "wk": ParamSpec((d, h * dh), ("embed", "heads")),
+        "wv": ParamSpec((d, h * dh), ("embed", "heads")),
+        "wo": ParamSpec((h * dh, d), ("heads", "embed")),
+    }
+
+
+def enc_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return transformer.block_specs(cfg, is_moe=False)
+
+
+def dec_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    s = transformer.block_specs(cfg, is_moe=False)
+    s["lnx"] = ParamSpec((cfg.d_model,), (None,), "ones")
+    s["cross"] = cross_attn_specs(cfg)
+    return s
+
+
+def model_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    s: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed")),
+        "enc": nn.stack_specs(enc_block_specs(cfg), cfg.enc_layers),
+        "dec": nn.stack_specs(dec_block_specs(cfg), cfg.dec_layers),
+        "ln_enc": ParamSpec((cfg.d_model,), (None,), "ones"),
+        "ln_f": ParamSpec((cfg.d_model,), (None,), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return s
+
+
+def _cross_kv(cfg: ModelConfig, p, enc_out: jax.Array):
+    b, s, _ = enc_out.shape
+    h, dh = cfg.num_heads, cfg.head_dim
+    k = jnp.einsum("bsd,dk->bsk", enc_out, p["wk"].astype(enc_out.dtype)).reshape(b, s, h, dh)
+    v = jnp.einsum("bsd,dk->bsk", enc_out, p["wv"].astype(enc_out.dtype)).reshape(b, s, h, dh)
+    return k, v
+
+
+def _cross_attn(cfg: ModelConfig, p, x: jax.Array, k: jax.Array, v: jax.Array):
+    b, s, _ = x.shape
+    h, dh = cfg.num_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dk->bsk", x, p["wq"].astype(x.dtype)).reshape(b, s, h, dh)
+    o = nn.attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    return jnp.einsum("bsk,kd->bsd", o.reshape(b, s, -1), p["wo"].astype(x.dtype))
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array, *, training: bool) -> jax.Array:
+    x = frames + nn.sinusoidal_pos(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    positions = jnp.arange(frames.shape[1])
+
+    def body(xx, p_l):
+        xx, _, _ = transformer.apply_block(
+            cfg, p_l, xx, positions, is_moe=False, causal=False
+        )
+        return xx, None
+
+    if training and cfg.remat != "nothing":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return nn.rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _dec_block(cfg, p_l, x, enc_out, positions, *, make_cache):
+    h = nn.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+    a, self_cache = transformer.gqa_attn_forward(
+        cfg, p_l["attn"], h, positions, make_cache=make_cache, causal=True
+    )
+    x = x + a
+    h = nn.rms_norm(x, p_l["lnx"], cfg.norm_eps)
+    ck, cv = _cross_kv(cfg, p_l["cross"], enc_out)
+    x = x + _cross_attn(cfg, p_l["cross"], h, ck, cv)
+    h = nn.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+    x = x + nn.swiglu(h, p_l["ffn"]["w_gate"], p_l["ffn"]["w_up"], p_l["ffn"]["w_down"])
+    cache = None
+    if make_cache:
+        cache = {"k": self_cache["k"], "v": self_cache["v"], "ck": ck, "cv": cv}
+    return x, cache
+
+
+def decode_train(cfg: ModelConfig, params, tokens: jax.Array, enc_out: jax.Array,
+                 *, training: bool, make_cache: bool = False):
+    x = params["embed"].astype(enc_out.dtype)[tokens]
+    x = x + nn.sinusoidal_pos(tokens.shape[1], cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(xx, p_l):
+        xx, cache = _dec_block(cfg, p_l, xx, enc_out, positions, make_cache=make_cache)
+        return xx, cache
+
+    if training and cfg.remat != "nothing":
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, params["dec"])
+    return nn.rms_norm(x, params["ln_f"], cfg.norm_eps), caches
+
+
+def decode_step(cfg: ModelConfig, params, caches, token: jax.Array, pos: jax.Array):
+    """token: (B,) int32; caches from prefill (self K/V ring + cross K/V)."""
+    x = params["embed"][token][:, None, :].astype(jnp.bfloat16)
+    x = x + nn.sinusoidal_pos(1, cfg.d_model, offset=pos).astype(x.dtype)
+
+    def body(xx, scanned):
+        p_l, c_l = scanned
+        h = nn.rms_norm(xx, p_l["ln1"], cfg.norm_eps)
+        a, kv = transformer.gqa_attn_decode(
+            cfg, p_l["attn"], h, {"k": c_l["k"], "v": c_l["v"]}, pos
+        )
+        xx = xx + a
+        h = nn.rms_norm(xx, p_l["lnx"], cfg.norm_eps)
+        xx = xx + _cross_attn(cfg, p_l["cross"], h, c_l["ck"], c_l["cv"])
+        h = nn.rms_norm(xx, p_l["ln2"], cfg.norm_eps)
+        xx = xx + nn.swiglu(h, p_l["ffn"]["w_gate"], p_l["ffn"]["w_up"], p_l["ffn"]["w_down"])
+        return xx, {"k": kv["k"], "v": kv["v"], "ck": c_l["ck"], "cv": c_l["cv"]}
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec"], caches))
+    return nn.rms_norm(x, params["ln_f"], cfg.norm_eps), new_caches
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    l, h, dh = cfg.dec_layers, cfg.num_heads, cfg.head_dim
+    self_shape = (l, batch, seq_len, cfg.num_kv_heads, dh)  # self-attn stores kv heads
+    cross_shape = (l, batch, seq_len, h, dh)  # cross K/V use full heads (MHA proj)
+    axes = ("layers", "act_batch", "kv_seq", None, "kv_dh")
+    return {
+        "k": ParamSpec(self_shape, axes),
+        "v": ParamSpec(self_shape, axes),
+        "ck": ParamSpec(cross_shape, axes),
+        "cv": ParamSpec(cross_shape, axes),
+    }

@@ -1,0 +1,312 @@
+"""Selective state-space blocks: Mamba1 (falcon-mamba-7b) and Mamba2
+(zamba2-1.2b backbone).
+
+The sequence dimension is processed with a *chunked* selective scan: the
+discretized transition/input terms (da, dbx) — the big (B, c, d_inner,
+d_state) tensors — are materialized only per chunk inside the ``lax.scan``
+body, the within-chunk recurrence h_t = a_t * h_{t-1} + b_t runs as an
+associative scan, and chunks carry the boundary state sequentially.  Peak
+memory is O(B * chunk * d_inner * d_state) instead of O(B * S * ...) — the
+same tiling contract the Pallas ``mamba_scan`` kernel implements in VMEM on
+TPU (kernels/mamba_scan validates against this path).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+from repro.models.nn import ParamSpec, logical_constraint
+
+SCAN_CHUNK = 256
+
+
+# --------------------------------------------------------------------------
+# chunk-scan skeleton
+# --------------------------------------------------------------------------
+
+
+def _assoc_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def run_chunked_scan(
+    seq_inputs: Any,  # pytree of (B, S, ...) arrays
+    h0: jax.Array,
+    chunk: int,
+    body_fn: Callable,  # (h_in, chunk_inputs) -> (h_out, y_chunk (B, c, ...))
+):
+    s = jax.tree.leaves(seq_inputs)[0].shape[1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # irregular smoke-test lengths: single chunk
+    n = s // chunk
+
+    def split(x):  # (B, S, ...) -> (n, B, c, ...)
+        return x.reshape(x.shape[0], n, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    chunks = jax.tree.map(split, seq_inputs)
+    h_last, y_chunks = jax.lax.scan(body_fn, h0, chunks)
+    y = y_chunks.swapaxes(0, 1)
+    return y.reshape(y.shape[0], s, *y.shape[3:]), h_last
+
+
+def intra_chunk_scan(da: jax.Array, dbx: jax.Array, h_in: jax.Array):
+    """da, dbx: (B, c, ...state); h_in: (B, ...state) -> (h_all, h_last)."""
+    a_cum, b_cum = jax.lax.associative_scan(_assoc_combine, (da, dbx), axis=1)
+    h_all = b_cum + a_cum * h_in[:, None]
+    return h_all, h_all[:, -1]
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via k shifted adds. x: (B, S, C), w: (C, k)."""
+    k = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    s = x.shape[1]
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        out = out + xp[:, j : j + s, :] * w[:, j].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def causal_conv_step(x_t: jax.Array, tail: jax.Array, w: jax.Array, b: jax.Array):
+    """One-token conv. x_t: (B, C); tail: (B, k-1, C) previous raw inputs."""
+    window = jnp.concatenate([tail, x_t[:, None, :]], axis=1)  # (B, k, C)
+    out = jnp.einsum("bkc,ck->bc", window, w.astype(x_t.dtype)) + b.astype(x_t.dtype)
+    return out, window[:, 1:, :]
+
+
+def _conv_tail(x_raw: jax.Array, k: int) -> jax.Array:
+    s = x_raw.shape[1]
+    if s >= k - 1:
+        return x_raw[:, -(k - 1) :, :]
+    return jnp.pad(x_raw, ((0, 0), (k - 1 - s, 0), (0, 0)))
+
+
+# --------------------------------------------------------------------------
+# Mamba1 (falcon-mamba)
+# --------------------------------------------------------------------------
+
+
+def mamba1_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, di, n, k, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv, cfg.dt_rank
+    return {
+        "ln": ParamSpec((d,), (None,), "ones"),
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((di, k), ("ssm_inner", None)),
+        "conv_b": ParamSpec((di,), ("ssm_inner",), "zeros"),
+        "x_proj": ParamSpec((di, r + 2 * n), ("ssm_inner", None)),
+        "dt_w": ParamSpec((r, di), (None, "ssm_inner")),
+        "dt_b": ParamSpec((di,), ("ssm_inner",), "dt_bias"),
+        "A_log": ParamSpec((di, n), ("ssm_inner", None), "s4d"),
+        "D": ParamSpec((di,), ("ssm_inner",), "ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mamba1_gates(cfg: ModelConfig, p, xi: jax.Array):
+    """xi: (B, ..., di) post-conv activations -> dt, B, C (f32)."""
+    n, r = cfg.ssm_state, cfg.dt_rank
+    proj = jnp.einsum("...c,cr->...r", xi, p["x_proj"].astype(xi.dtype))
+    dt_low, bb, cc = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jnp.einsum("...r,rc->...c", dt_low, p["dt_w"].astype(xi.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_b"].astype(jnp.float32))
+    return dt, bb.astype(jnp.float32), cc.astype(jnp.float32)
+
+
+def mamba1_forward(cfg: ModelConfig, p, x: jax.Array, *, make_cache: bool = False):
+    """x: (B, S, d) -> (y, cache | None)."""
+    bsz, s, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    h = nn.rms_norm(x, p["ln"], cfg.norm_eps)
+    xz = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(h.dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = logical_constraint(xi, "act_batch", None, "ssm_inner")
+    xc = nn.silu(causal_conv(xi, p["conv_w"], p["conv_b"]))
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, n)
+    d_skip = p["D"].astype(jnp.float32)
+
+    def body(h_in, xc_c):
+        dt, bb, cc = _mamba1_gates(cfg, p, xc_c)  # (B, c, di|n)
+        da = jnp.exp(dt[..., None] * A)  # (B, c, di, n)
+        dbx = (dt * xc_c.astype(jnp.float32))[..., None] * bb[:, :, None, :]
+        h_all, h_out = intra_chunk_scan(da, dbx, h_in)
+        y = jnp.einsum("bscn,bsn->bsc", h_all, cc)
+        y = y + d_skip * xc_c.astype(jnp.float32)
+        return h_out, y.astype(x.dtype)
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    y, h_last = run_chunked_scan(xc, h0, SCAN_CHUNK, body)
+    y = (y.astype(jnp.float32) * nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsc,cd->bsd", y, p["out_proj"].astype(x.dtype))
+
+    cache = None
+    if make_cache:
+        cache = {"state": h_last, "conv": _conv_tail(xi, cfg.ssm_conv)}
+    return x + out, cache
+
+
+def mamba1_decode(cfg: ModelConfig, p, x: jax.Array, cache):
+    """x: (B, 1, d); cache {state: (B, di, n), conv: (B, k-1, di)}."""
+    h = nn.rms_norm(x, p["ln"], cfg.norm_eps)
+    xz = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(h.dtype))
+    xi, z = jnp.split(xz[:, 0], 2, axis=-1)  # (B, di)
+    xc, new_tail = causal_conv_step(xi, cache["conv"], p["conv_w"], p["conv_b"])
+    xc = nn.silu(xc)
+    dt, bb, cc = _mamba1_gates(cfg, p, xc)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt[..., None] * A)  # (B, di, n)
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * bb[:, None, :]
+    hst = da * cache["state"] + dbx
+    y = jnp.einsum("bcn,bn->bc", hst, cc) + p["D"].astype(jnp.float32) * xc.astype(
+        jnp.float32
+    )
+    y = (y * nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bc,cd->bd", y, p["out_proj"].astype(x.dtype))[:, None]
+    return x + out, {"state": hst, "conv": new_tail}
+
+
+def mamba1_cache_specs(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
+    return {
+        "state": ParamSpec((batch, cfg.d_inner, cfg.ssm_state), ("act_batch", "ssm_inner", None)),
+        "conv": ParamSpec((batch, cfg.ssm_conv - 1, cfg.d_inner), ("act_batch", None, "ssm_inner")),
+    }
+
+
+# --------------------------------------------------------------------------
+# Mamba2 (zamba2 backbone)
+# --------------------------------------------------------------------------
+
+
+def mamba2_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, di, n, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    nh = cfg.ssm_heads
+    conv_dim = di + 2 * n
+    return {
+        "ln": ParamSpec((d,), (None,), "ones"),
+        "in_proj": ParamSpec((d, 2 * di + 2 * n + nh), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((conv_dim, k), ("ssm_inner", None)),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), "zeros"),
+        "A_log": ParamSpec((nh,), ("ssm_heads",), "s4d"),
+        "D": ParamSpec((nh,), ("ssm_heads",), "ones"),
+        "dt_b": ParamSpec((nh,), ("ssm_heads",), "dt_bias"),
+        "norm": ParamSpec((di,), ("ssm_inner",), "ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def mamba2_forward(cfg: ModelConfig, p, x: jax.Array, *, make_cache: bool = False):
+    bsz, s, _ = x.shape
+    di, n, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = nn.rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(h.dtype))
+    z, xbc_raw, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xbc = nn.silu(causal_conv(xbc_raw, p["conv_w"], p["conv_b"]))
+    xi, bb, cc = jnp.split(xbc, [di, di + n], axis=-1)
+    xi = logical_constraint(xi, "act_batch", None, "ssm_inner")
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+    d_skip = p["D"].astype(jnp.float32)
+
+    def body_scan(h_in, inputs):
+        """Elementwise associative scan: materializes (B, c, H, P, N) state
+        tensors per chunk — HBM-bound on the XLA path (§Perf B baseline)."""
+        xi_c, bb_c, cc_c, dtr_c = inputs  # (B, c, ...)
+        dt = jax.nn.softplus(dtr_c.astype(jnp.float32) + p["dt_b"].astype(jnp.float32))
+        da = jnp.exp(dt * A)  # (B, c, H)
+        xh = xi_c.reshape(*xi_c.shape[:2], nh, hp).astype(jnp.float32)
+        dbx = (dt[..., None] * xh)[..., None] * bb_c.astype(jnp.float32)[:, :, None, None, :]
+        da_b = jnp.broadcast_to(da[..., None, None], dbx.shape)
+        h_all, h_out = intra_chunk_scan(da_b, dbx, h_in)
+        y = jnp.einsum("bshpn,bsn->bshp", h_all, cc_c.astype(jnp.float32))
+        y = y + d_skip[:, None] * xh
+        return h_out, y.reshape(*xi_c.shape[:2], di).astype(x.dtype)
+
+    def body_ssd(h_in, inputs):
+        """SSD (matmul) form of the same recurrence [Mamba2 paper §6]: the
+        per-chunk working set is (B, c, c, H) attention-like matrices instead
+        of (B, c, H, P, N) states — ~N x less HBM traffic, and the work runs
+        as MXU matmuls (§Perf B optimized)."""
+        xi_c, bb_c, cc_c, dtr_c = inputs
+        c = xi_c.shape[1]
+        dt = jax.nn.softplus(dtr_c.astype(jnp.float32) + p["dt_b"].astype(jnp.float32))
+        da = dt * A  # (B, c, H), negative
+        cs = jnp.cumsum(da, axis=1)  # inclusive log-decay prefix
+        xh = xi_c.reshape(bsz, c, nh, hp).astype(jnp.float32)
+        bbf = bb_c.astype(jnp.float32)
+        ccf = cc_c.astype(jnp.float32)
+        # intra-chunk: y_i += sum_{j<=i} exp(cs_i - cs_j) dt_j (C_i.B_j) x_j
+        diff = cs[:, :, None, :] - cs[:, None, :, :]  # (B, c, c, H), <= 0 on tril
+        tril = jnp.tril(jnp.ones((c, c), bool))
+        L = jnp.where(tril[None, :, :, None], jnp.exp(diff), 0.0)
+        L = L * dt[:, None, :, :]  # decay * dt_j
+        G = jnp.einsum("bin,bjn->bij", ccf, bbf)  # (B, c, c) C_i . B_j
+        M = G[..., None] * L  # (B, c, c, H)
+        y = jnp.einsum("bijh,bjhp->bihp", M, xh)
+        # inter-chunk: y_i += exp(cs_i) C_i . h_in
+        y = y + jnp.exp(cs)[..., None] * jnp.einsum("bin,bhpn->bihp", ccf, h_in)
+        y = y + d_skip[:, None] * xh
+        # carry: h_out = exp(cs_last) h_in + sum_j exp(cs_last - cs_j) b_j
+        decay_end = jnp.exp(cs[:, -1:, :] - cs) * dt  # (B, c, H)
+        h_out = jnp.exp(cs[:, -1, :])[..., None, None] * h_in + jnp.einsum(
+            "bch,bchp,bcn->bhpn", decay_end, xh, bbf
+        )
+        return h_out, y.reshape(bsz, c, di).astype(x.dtype)
+
+    body = body_ssd if cfg.ssm_algo == "ssd" else body_scan
+    chunk = SCAN_CHUNK if cfg.ssm_algo == "ssd" else SCAN_CHUNK // 4
+    h0 = jnp.zeros((bsz, nh, hp, n), jnp.float32)
+    y, h_last = run_chunked_scan((xi, bb, cc, dt_raw), h0, chunk, body)
+    y = nn.rms_norm(
+        (y.astype(jnp.float32) * nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+        p["norm"],
+        cfg.norm_eps,
+    )
+    out = jnp.einsum("bsc,cd->bsd", y, p["out_proj"].astype(x.dtype))
+
+    cache = None
+    if make_cache:
+        cache = {"state": h_last, "conv": _conv_tail(xbc_raw, cfg.ssm_conv)}
+    return x + out, cache
+
+
+def mamba2_decode(cfg: ModelConfig, p, x: jax.Array, cache):
+    bsz = x.shape[0]
+    di, n, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = nn.rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(h.dtype))[:, 0]
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xbc_c, new_tail = causal_conv_step(xbc, cache["conv"], p["conv_w"], p["conv_b"])
+    xbc_c = nn.silu(xbc_c)
+    xi, bb, cc = jnp.split(xbc_c, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_b"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * A)  # (B,H)
+    xh = xi.reshape(bsz, nh, hp).astype(jnp.float32)
+    dbx = (dt[..., None] * xh)[..., None] * bb.astype(jnp.float32)[:, None, None, :]
+    hst = da[..., None, None] * cache["state"] + dbx
+    y = jnp.einsum("bhpn,bn->bhp", hst, cc.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(bsz, di)
+    y = nn.rms_norm(
+        (y * nn.silu(z.astype(jnp.float32))).astype(x.dtype), p["norm"], cfg.norm_eps
+    )
+    out = jnp.einsum("bc,cd->bd", y, p["out_proj"].astype(x.dtype))[:, None]
+    return x + out, {"state": hst, "conv": new_tail}
+
+
+def mamba2_cache_specs(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "state": ParamSpec(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            ("act_batch", "ssm_heads", None, None),
+        ),
+        "conv": ParamSpec((batch, cfg.ssm_conv - 1, conv_dim), ("act_batch", None, "ssm_inner")),
+    }

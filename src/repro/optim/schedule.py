@@ -1,0 +1,31 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, minicpm's schedule)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, peak_lr: float, total_steps: int, warmup_steps: int = 100,
+           min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    frac = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, total_steps: int, warmup_steps: int = 100,
+        decay_frac: float = 0.1, min_ratio: float = 0.01):
+    """Warmup -> stable (constant) -> exponential-ish linear decay tail."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_steps = jnp.maximum(total_steps * decay_frac, 1)
+    decay_start = total_steps - decay_steps
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    tail_frac = jnp.clip((step - decay_start) / decay_steps, 0, 1)
+    tail = peak_lr * (min_ratio ** tail_frac)  # exponential decay tail
+    lr = jnp.where(step < warmup_steps, warm, jnp.where(step < decay_start, peak_lr, tail))
+    return lr
+
+
+def make(name: str, **kw):
+    fn = {"cosine": cosine, "wsd": wsd}[name]
+    return lambda step: fn(step, **kw)

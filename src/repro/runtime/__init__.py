@@ -1,0 +1,3 @@
+from repro.runtime import sharding
+
+__all__ = ["sharding"]

@@ -1,0 +1,124 @@
+"""Logical-axis -> mesh-axis resolution (MaxText-style).
+
+Model code annotates parameters (via ``ParamSpec.axes``) and activations (via
+``nn.logical_constraint``) with *logical* names; this module maps them onto
+the physical mesh:
+
+  TP axis ("model"):  vocab, mlp, heads, kv_heads, experts, ssm_inner, ssm_heads
+  FSDP axis ("data"): embed (the d_model dim of every weight matrix)
+  DP axes:            act_batch -> ("pod", "data") / ("data",)
+
+For *jit inputs* (params, optimizer state, caches, batches) a mesh axis is
+dropped from the spec when the dimension is not divisible by the axis size
+(uneven input shardings are where GSPMD padding hurts; constraints inside the
+program may still pad).  This keeps e.g. a kv_heads=8 cache valid on a
+model=16 mesh by replicating that dim.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import nn
+from repro.models.nn import ParamSpec
+
+MeshAxes = Any  # str | tuple[str, ...] | None
+
+
+def base_rules(mesh: Mesh, *, fsdp: bool = True, zero_weights_on_pod: bool = False,
+               cache_shard: str = "seq") -> Dict[str, MeshAxes]:
+    axes = mesh.axis_names
+    dp_axes = tuple(a for a in ("pod", "data") if a in axes)
+    fsdp_axes: MeshAxes = None
+    if fsdp:
+        fsdp_axes = dp_axes if zero_weights_on_pod else tuple(a for a in dp_axes if a != "pod")
+        if len(fsdp_axes) == 1:
+            fsdp_axes = fsdp_axes[0]
+        elif not fsdp_axes:
+            fsdp_axes = None
+    model = "model" if "model" in axes else None
+    return {
+        "vocab": model,
+        "mlp": model,
+        "heads": model,
+        "kv_heads": model,
+        "experts": model,
+        "ssm_inner": model,
+        "ssm_heads": model,
+        "embed": fsdp_axes,
+        # decode caches take the TP axis on exactly one dim (§Perf A1):
+        #   seq — flash-decoding split-KV (baseline)
+        #   dh  — head_dim split: cache writes stay local, scores partial-sum
+        "kv_seq": model if cache_shard == "seq" else None,
+        "kv_dh": model if cache_shard == "dh" else None,
+        "lora": None,
+        "lora_cache": None,
+        "experts_router": None,
+        "layers": None,
+        "act_batch": dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None),
+    }
+
+
+def _axis_size(mesh: Mesh, entry: MeshAxes) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    return int(np.prod([mesh.shape[a] for a in entry]))
+
+
+def spec_for(
+    mesh: Mesh, rules: Dict[str, MeshAxes], axes: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+) -> P:
+    """PartitionSpec for one tensor, dropping non-divisible mesh axes."""
+    entries = []
+    for dim, name in zip(shape, axes):
+        entry = rules.get(name) if name else None
+        if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            entry = None  # replicate: uneven jit-input shardings disallowed
+        entries.append(entry)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def sharding_for_specs(mesh: Mesh, rules: Dict[str, MeshAxes], specs: Any) -> Any:
+    """ParamSpec pytree -> NamedSharding pytree (same structure)."""
+
+    def one(s: ParamSpec) -> NamedSharding:
+        return NamedSharding(mesh, spec_for(mesh, rules, s.axes, s.shape))
+
+    return nn.spec_tree_map(one, specs)
+
+
+def batch_sharding(mesh: Mesh, rules: Dict[str, MeshAxes], batch_specs: Any) -> Any:
+    """Shard every array-like input on its leading (batch) dim; scalars replicated."""
+    dp = rules.get("act_batch")
+
+    def one(x):
+        shape = x.shape
+        if not shape:
+            return NamedSharding(mesh, P())
+        entry = dp
+        if entry is not None and shape[0] % _axis_size(mesh, entry) != 0:
+            entry = None
+        return NamedSharding(mesh, P(entry))
+
+    return jax.tree.map(one, batch_specs)
+
+
+def cache_sharding(mesh: Mesh, rules: Dict[str, MeshAxes], cache_specs: Any) -> Any:
+    return sharding_for_specs(mesh, rules, cache_specs)
+
+
+def activate(mesh: Mesh, rules: Dict[str, MeshAxes]) -> None:
+    """Install rules so nn.logical_constraint resolves inside jit bodies."""
+    nn.set_logical_rules(mesh, rules)
+
+
+def deactivate() -> None:
+    nn.clear_logical_rules()

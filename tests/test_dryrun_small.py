@@ -1,0 +1,53 @@
+"""Dry-run machinery integration test: reduced configs, small fake-device
+meshes, run in subprocesses (device count locks at jax init).  Covers the
+same code path as the production 16x16 / 2x16x16 batch."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_dryrun(arch: str, cell: str, mesh: str, tmp, extra=()):
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.path.join(REPO, "src"),
+        REPRO_XLA_FLAGS="--xla_force_host_platform_device_count=16",
+    )
+    out = os.path.join(tmp, "dr")
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+        "--cell", cell, "--mesh", mesh, "--reduced", "--out", out, *extra,
+    ]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env, timeout=420)
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-2500:]
+    tag = f"{arch}_{cell}_{mesh}_baseline_reduced"
+    rec = json.loads(open(os.path.join(out, f"{tag}.json")).read())
+    assert rec["ok"], rec.get("error")
+    return rec
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mesh", ["2x2", "2x2x2"])
+def test_dryrun_train_single_and_multipod(mesh, tmp_path):
+    rec = run_dryrun("minicpm-2b", "train_4k", mesh, str(tmp_path))
+    assert rec["flops"] > 0 and rec["hbm_bytes"] > 0
+    assert rec["bottleneck"] in ("compute", "memory", "collective")
+    assert rec["memory_analysis"]["temp_size_in_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_decode_cache_shard_modes(tmp_path):
+    a = run_dryrun("qwen3-14b", "decode_32k", "2x2", str(tmp_path))
+    b = run_dryrun("qwen3-14b", "decode_32k", "2x2", str(tmp_path) + "b",
+                   extra=("--cache-shard", "dh"))
+    assert a["ok"] and b["ok"]
+
+
+@pytest.mark.slow
+def test_dryrun_moe_and_ssm_families(tmp_path):
+    run_dryrun("deepseek-v2-lite-16b", "train_4k", "2x2", str(tmp_path))
+    run_dryrun("falcon-mamba-7b", "decode_32k", "2x2", str(tmp_path) + "f")

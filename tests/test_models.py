@@ -1,0 +1,98 @@
+"""Per-arch smoke tests: REDUCED same-family configs, one forward/train step
+and one prefill+decode step on CPU; asserts output shapes and finiteness.
+The FULL configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import model as M
+from repro.models import nn
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S = 2, 64
+
+
+def make_batch(cfg, rng):
+    if cfg.family == "vlm":
+        p = cfg.num_prefix_tokens
+        return {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S - p)), jnp.int32),
+            "patches": jnp.asarray(rng.normal(size=(B, p, cfg.d_model)), jnp.bfloat16),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S - p)), jnp.int32),
+        }
+    if cfg.family == "audio":
+        return {
+            "frames": jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.bfloat16),
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        }
+    return {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+    }
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch, rng):
+    cfg = get_config(arch).reduced()
+    specs = M.model_specs(cfg)
+    params = nn.init_params(specs, jax.random.key(0))
+    batch = make_batch(cfg, rng)
+
+    loss, grads = jax.jit(
+        lambda p, b: jax.value_and_grad(lambda pp: M.loss_fn(cfg, pp, b)[0])(p)
+    )(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss {loss}"
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    assert np.isfinite(float(gnorm)), f"{arch}: non-finite grad norm"
+    assert float(gnorm) > 0, f"{arch}: zero gradient"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode(arch, rng):
+    cfg = get_config(arch).reduced()
+    specs = M.model_specs(cfg)
+    params = nn.init_params(specs, jax.random.key(1))
+    batch = make_batch(cfg, rng)
+    batch.pop("labels")
+
+    logits, cache = jax.jit(lambda p, b: M.prefill(cfg, p, b))(params, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), f"{arch}: prefill NaN"
+
+    # one decode step appended at position S (cache must have a free slot:
+    # decode caches in these tests are sized by prefill seq len, so write at
+    # the ring slot / last slot as the model family dictates)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    pos = jnp.asarray(S - 1, jnp.int32)  # overwrite last slot: shape-safe
+    logits2, cache2 = jax.jit(lambda p, c, t, q: M.decode_step(cfg, p, c, t, q))(
+        params, cache, tok, pos
+    )
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all(), f"{arch}: decode NaN"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_live_cells_and_counts(arch):
+    cfg = get_config(arch)
+    cells = cfg.live_cells()
+    names = [c.name for c in cells]
+    assert "train_4k" in names and "decode_32k" in names
+    if arch in ("falcon-mamba-7b", "zamba2-1.2b", "h2o-danube-1.8b"):
+        assert "long_500k" in names
+    else:
+        assert "long_500k" not in names
+    n = M.param_count(cfg)
+    assert n > 0
+    if cfg.family == "moe":
+        assert M.param_count(cfg, active_only=True) < n

@@ -1,0 +1,97 @@
+"""Cross-cutting property tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sim.config import SimConfig
+from repro.core.sim.engine import LRU, DualQueueLink, Engine
+from repro.optim import schedule
+from repro.runtime.elastic import plan_mesh
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@settings(max_examples=25, deadline=None)
+@given(cap=st.integers(1, 32), n=st.integers(1, 200), seed=st.integers(0, 99))
+def test_lru_never_exceeds_capacity_and_hits_recent(cap, n, seed):
+    rng = np.random.default_rng(seed)
+    lru = LRU(cap)
+    for tag in rng.integers(0, 50, n):
+        if not lru.access(int(tag)):
+            lru.insert(int(tag))
+        assert len(lru.d) <= cap
+    last = int(rng.integers(0, 50))
+    lru.insert(last)
+    assert lru.access(last)  # most-recent always resident
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    sizes=st.lists(
+        st.tuples(st.sampled_from(["line", "page"]), st.floats(8, 4096)),
+        min_size=1, max_size=30,
+    ),
+    bw=st.floats(1.0, 64.0),
+    share=st.floats(0.1, 0.9),
+)
+def test_dual_queue_link_conserves_all_transfers(sizes, bw, share):
+    """Every transfer enqueued on the fluid dual-queue link completes exactly
+    once, regardless of interleaving (the deadlock class fixed in §sim)."""
+    eng = Engine()
+    link = DualQueueLink(eng, bw, share)
+    done = []
+    t = 0.0
+    for i, (cls, size) in enumerate(sizes):
+        t += (i % 3) * 0.5  # staggered arrivals
+        eng.at(t, lambda tt, s=size, c=cls, j=i: link.send(tt, s, lambda a: done.append(j), c))
+    eng.run()
+    assert sorted(done) == list(range(len(sizes)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    total=st.integers(10, 5000),
+    peak=st.floats(1e-5, 1.0),
+)
+def test_schedules_bounded_and_nonnegative(total, peak):
+    warm = max(1, total // 10)
+    for name in ("wsd", "cosine"):
+        f = schedule.make(name, peak_lr=peak, total_steps=total, warmup_steps=warm)
+        for s in (0, warm, total // 2, total - 1, total):
+            v = float(f(s))
+            assert 0.0 <= v <= peak * 1.0001, (name, s, v)
+
+
+@settings(max_examples=30, deadline=None)
+@given(chips=st.integers(16, 4096), batch=st.sampled_from([64, 128, 256, 512]))
+def test_plan_mesh_invariants(chips, batch):
+    plan = plan_mesh(chips, model_degree=16, global_batch=batch)
+    assert plan.used_chips + plan.spare_chips == chips
+    assert plan.used_chips == plan.pods * plan.data * plan.model
+    assert plan.model == 16
+    assert batch % (plan.data * plan.pods) == 0 or plan.data == 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50), b=st.integers(1, 3), s=st.sampled_from([16, 32]))
+def test_chunked_ce_matches_full_ce(seed, b, s):
+    """The chunked cross-entropy equals a direct full-logits computation."""
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.models import nn
+
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    params = nn.init_params(M.model_specs(cfg), jax.random.key(seed))
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+    }
+    loss, metrics = M.loss_fn(cfg, params, batch, training=False, z_weight=0.0)
+    hidden, _, _ = M.forward_hidden(cfg, params, batch, training=False)
+    logits = M.logits_at(cfg, params, hidden)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, batch["labels"][..., None], axis=-1)[..., 0]
+    direct = jnp.mean(logz - ll)
+    np.testing.assert_allclose(float(metrics["ce"]), float(direct), rtol=2e-5)

@@ -1,0 +1,105 @@
+"""Faithful-reproduction tests for the DaeMon DS simulator (paper §3/§4):
+scheme ordering, robustness (daemon never loses to page), the headline
+geomean claims, and Fig-4-style sweeps."""
+import pytest
+
+from repro.core.sim import (
+    SCHEMES, SimConfig, fig2, fig4_bottom, fig4_top, geomean, paper_claims,
+    run_one, slowdowns,
+)
+
+N = 15_000  # accesses per thread-group: fast but statistically stable
+
+
+def test_local_is_fastest():
+    for w in ("pr", "st"):
+        loc = run_one(w, "local", n_accesses=N)
+        for s in ("page", "cacheline", "both", "daemon"):
+            m = run_one(w, s, n_accesses=N)
+            assert m.cycles >= loc.cycles * 0.99, (w, s)
+
+
+def test_page_free_matches_local_performance_class():
+    """'Page moved for free' ~= locality benefits without transfer cost."""
+    for w in ("pr", "dr"):
+        free = run_one(w, "page_free", n_accesses=N)
+        page = run_one(w, "page", n_accesses=N)
+        assert free.cycles < page.cycles
+
+
+def test_line_friendly_vs_page_friendly_classes():
+    """Paper Fig 2 structure: some workloads prefer line movement (irregular:
+    pr, nw, dr-as-delaunay) while others prefer pages (streaming: st) — no
+    fixed granularity is robust across the suite."""
+    cfg = SimConfig(link_bw_frac=0.25)
+    for w, line_wins in (("pr", True), ("nw", True), ("dr", True), ("st", False)):
+        line = run_one(w, "cacheline", cfg, n_accesses=N)
+        page = run_one(w, "page", cfg, n_accesses=N)
+        assert (line.cycles < page.cycles) == line_wins, w
+
+
+def test_daemon_robust_never_loses_to_page():
+    """The robustness claim: daemon <= ~page on EVERY workload and network."""
+    for bw in (0.5, 0.25, 0.125):
+        cfg = SimConfig(link_bw_frac=bw)
+        for w in ("pr", "bf", "ts", "nw", "dr", "pf", "st", "ml"):
+            page = run_one(w, "page", cfg, n_accesses=N)
+            dae = run_one(w, "daemon", cfg, n_accesses=N)
+            assert dae.cycles <= page.cycles * 1.05, (w, bw)
+
+
+def test_daemon_beats_naive_both():
+    """Decoupled queues beat single-FIFO line+page on line-friendly loads."""
+    cfg = SimConfig(link_bw_frac=0.125)
+    for w in ("pr", "nw"):
+        both = run_one(w, "both", cfg, n_accesses=N)
+        dae = run_one(w, "daemon", cfg, n_accesses=N)
+        assert dae.cycles < both.cycles, w
+
+
+def test_compression_reduces_network_bytes():
+    cfg = SimConfig(link_bw_frac=0.125)
+    on = run_one("pr", "daemon", cfg, n_accesses=N)
+    off = run_one("pr", "daemon", cfg.with_(compress=False), n_accesses=N)
+    assert on.net_bytes < off.net_bytes
+    assert on.bytes_saved_compression > 0
+    assert on.cycles <= off.cycles * 1.02
+
+
+def test_paper_claims():
+    """Headline: paper reports 2.39x perf / 3.06x access-cost geomean for
+    daemon over page.  Our synthetic-trace reproduction must land in the
+    same regime (>=1.8x both, bracketing the claims across 1/4-1/8 bw)."""
+    r = paper_claims(n_accesses=N)
+    assert r["perf_speedup_geomean"] >= 1.8, r
+    assert r["access_cost_reduction_geomean"] >= 1.8, r
+    # tighter band at the congested end
+    assert r["per_bw"][0.125]["perf"] >= 2.2, r
+
+
+def test_fig4_top_bandwidth_trend():
+    """Gains grow as network bandwidth shrinks (paper Fig 4 top)."""
+    rows = fig4_top(workloads=("pr",), bw_fracs=(0.5, 0.125), n_mcs_list=(1,),
+                    n_accesses=N)
+    by_bw = {r["bw_frac"]: r["speedup"] for r in rows}
+    assert by_bw[0.125] > by_bw[0.5]
+
+
+def test_fig4_top_more_mcs_reduce_pressure():
+    rows = fig4_top(workloads=("pr",), bw_fracs=(0.125,), n_mcs_list=(1, 4),
+                    n_accesses=N)
+    by_mc = {r["n_mcs"]: r["speedup"] for r in rows}
+    # with 4x aggregate bandwidth the page scheme suffers less -> smaller gap
+    assert by_mc[4] <= by_mc[1] * 1.1
+
+
+def test_fig4_bottom_multijob():
+    rows = fig4_bottom(workloads=("pr", "nw"), n_jobs=2, n_accesses=N)
+    for r in rows:
+        assert r["speedup"] >= 1.0, r
+
+
+def test_determinism():
+    a = run_one("pr", "daemon", n_accesses=5000, seed=3)
+    b = run_one("pr", "daemon", n_accesses=5000, seed=3)
+    assert a.cycles == b.cycles and a.net_bytes == b.net_bytes

@@ -1,0 +1,205 @@
+"""Substrate tests: data pipeline determinism/sharding/resume, checkpoint
+save/restore/corruption/async/gc, fault-tolerance state machines, elastic
+mesh planning, schedules, and the end-to-end train driver (incl. crash +
+resume and daemon movement)."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, TokenPipeline
+from repro.optim import adamw, schedule
+from repro.runtime.elastic import plan_mesh, replan_after_failure
+from repro.runtime.fault import (
+    Action, HeartbeatMonitor, HostState, RunSupervisor, StragglerPolicy,
+)
+
+
+# ------------------------------- data -------------------------------------
+
+
+def test_pipeline_deterministic_and_sharded():
+    base = DataConfig(vocab_size=1000, seq_len=32, global_batch=8, seed=7)
+    full = TokenPipeline(base)
+    b_full = full.batch_at(5)
+    full.close()
+    # two DP shards reproduce exactly their halves of the global batch
+    for rank in (0, 1):
+        p = TokenPipeline(DataConfig(
+            vocab_size=1000, seq_len=32, global_batch=8, seed=7,
+            dp_rank=rank, dp_size=2,
+        ))
+        b = p.batch_at(5)
+        np.testing.assert_array_equal(b["tokens"], b_full["tokens"][rank * 4:(rank + 1) * 4])
+        p.close()
+
+
+def test_pipeline_labels_shifted_and_resume():
+    p = TokenPipeline(DataConfig(vocab_size=50, seq_len=16, global_batch=2))
+    b = p.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    # resume from a counter reproduces the same stream
+    b3 = p.batch_at(3)
+    p.close()
+    p2 = TokenPipeline(DataConfig(vocab_size=50, seq_len=16, global_batch=2), start_step=3)
+    first = next(p2)
+    np.testing.assert_array_equal(first["tokens"], b3["tokens"])
+    p2.close()
+
+
+# ----------------------------- checkpoint ---------------------------------
+
+
+def make_tree(key=0):
+    k = jax.random.key(key)
+    return {
+        "a": jax.random.normal(k, (8, 16)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = make_tree()
+    mgr.save(10, tree, {"step": 10})
+    out, extra = mgr.restore(None, tree)
+    assert extra["step"] == 10
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(out["nested"]["b"]), np.asarray(tree["nested"]["b"]))
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = make_tree()
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, tree, {"step": s})
+    mgr.wait()
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, make_tree())
+    payload = tmp_path / "step_00000001" / "arrays" / "shard_0.npz.zst"
+    data = bytearray(payload.read_bytes())
+    data[10] ^= 0xFF
+    payload.write_bytes(bytes(data))
+    with pytest.raises(IOError):
+        mgr.restore(1, make_tree())
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, make_tree())
+    bad = {"a": jnp.zeros((4, 4)), "nested": {"b": jnp.zeros(10, jnp.int32)}}
+    with pytest.raises(ValueError):
+        mgr.restore(1, bad)
+
+
+# ------------------------------- fault ------------------------------------
+
+
+def test_heartbeat_states():
+    m = HeartbeatMonitor(interval_s=1.0, suspect_after=2, dead_after=5)
+    m.beat(0, now=100.0)
+    assert m.state(0, now=100.5) == HostState.ALIVE
+    assert m.state(0, now=103.0) == HostState.SUSPECT
+    assert m.state(0, now=106.0) == HostState.DEAD
+    assert m.state(99, now=0.0) == HostState.DEAD  # never beat
+
+
+def test_straggler_escalation_ladder():
+    p = StragglerPolicy(rebalance_after=2, exclude_after=4, evict_after=6)
+    actions = {}
+    for step in range(7):
+        actions = p.observe_step({0: 1.0, 1: 1.0, 2: 2.0})  # host 2 is 2x median
+    assert actions[0] == Action.NONE
+    assert actions[2] == Action.EVICT
+    # recovery resets the streak
+    actions = p.observe_step({0: 1.0, 1: 1.0, 2: 1.0})
+    assert actions[2] == Action.NONE
+
+
+def test_supervisor_elastic_restart_on_death():
+    sup = RunSupervisor(hosts=[0, 1, 2, 3], monitor=HeartbeatMonitor(interval_s=1.0))
+    now = 1000.0
+    sup.monitor.beat(3, now=now)  # host 3 goes silent afterwards
+    for h in (0, 1, 2):
+        sup.monitor.beat(h, now=now + 100)
+    survivors = sup.tick({0: 1.0, 1: 1.0, 2: 1.0}, now=now + 100)
+    assert survivors == [0, 1, 2]
+    assert ("dead", 3) in sup.events
+
+
+def test_elastic_mesh_planning():
+    plan = plan_mesh(512, model_degree=16, global_batch=256, chips_per_pod=256)
+    assert plan.shape == (2, 16, 16) and plan.spare_chips == 0
+    # lose a host (8 chips): data degree shrinks, TP pinned
+    smaller = replan_after_failure(plan, lost_chips=8, global_batch=256)
+    assert smaller.model == 16
+    assert smaller.used_chips <= 504
+    assert smaller.data >= 1
+
+
+# ------------------------------ schedules ---------------------------------
+
+
+def test_wsd_schedule_shape():
+    f = schedule.make("wsd", peak_lr=1.0, total_steps=1000, warmup_steps=100)
+    assert float(f(0)) == 0.0
+    assert abs(float(f(100)) - 1.0) < 1e-6
+    assert abs(float(f(500)) - 1.0) < 1e-6  # stable phase
+    assert float(f(999)) < 0.1  # decay tail
+    c = schedule.make("cosine", peak_lr=1.0, total_steps=1000)
+    assert float(c(1000)) <= 0.11
+
+
+def test_adamw_reduces_loss_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw.init(params)
+    for i in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw.update(grads, state, params, lr=0.05, weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+# ----------------------------- train driver -------------------------------
+
+
+def test_train_driver_with_checkpoint_resume(tmp_path):
+    from repro.launch.train import train
+
+    _, _, losses1 = train(
+        "h2o-danube-1.8b", reduced=True, steps=8, global_batch=4, seq_len=32,
+        ckpt_dir=str(tmp_path), ckpt_every=4, log_every=100,
+    )
+    assert losses1[-1] < losses1[0]
+    # resume: continues from step 8's checkpoint without error
+    _, _, losses2 = train(
+        "h2o-danube-1.8b", reduced=True, steps=12, global_batch=4, seq_len=32,
+        ckpt_dir=str(tmp_path), ckpt_every=4, resume=True, log_every=100,
+    )
+    assert len(losses2) == 4  # steps 8..12
+    assert all(np.isfinite(losses2))
+
+
+def test_train_driver_daemon_movement():
+    from repro.launch.train import train
+
+    _, _, losses = train(
+        "minicpm-2b", reduced=True, steps=6, global_batch=4, seq_len=32,
+        movement="daemon", num_microbatches=2, log_every=100,
+    )
+    assert losses[-1] < losses[0]
+
+
+def test_serve_driver():
+    from repro.launch.serve import serve
+
+    r = serve("qwen3-14b", reduced=True, batch=2, prompt_len=32, gen_tokens=8)
+    assert r["tokens"].shape == (2, 8)
+    assert (r["tokens"] >= 0).all()
