@@ -1,0 +1,9 @@
+"""Benchmark scripts for the paper figures and scenario sweeps.
+
+Simulator sections declare Sweeps (docs/SWEEPS.md) and merge their grids
+into the BENCH_sim.json ledger at the repo root.
+"""
+import os
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_sim.json")

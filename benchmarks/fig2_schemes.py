@@ -1,28 +1,106 @@
 """Paper Fig. 2: data-movement overheads of each scheme, normalized to the
-monolithic `local` configuration, per workload."""
+monolithic `local` configuration, per workload.
+
+The whole figure is ONE declarative Sweep (docs/SWEEPS.md) executed by the
+process-pool sweep engine; results merge into BENCH_sim.json at the repo
+root.  ``python benchmarks/fig2_schemes.py --compare`` runs the same grid
+serially and in parallel, asserts cell-for-cell identical Metrics, and
+reports the wall-clock speedup.
+"""
 from __future__ import annotations
 
-import time
+import os
+import sys
 
-from repro.core.sim import SCHEMES, SimConfig, fig2, slowdowns
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core.sim import (
+    SCHEMES,
+    SimConfig,
+    Sweep,
+    default_workers,
+    fig2_spec,
+    run_sweep,
+    scheme_geomean,
+    write_bench,
+)
+
+from benchmarks import BENCH_PATH
 
 WORKLOADS = ("pr", "bf", "ts", "nw", "dr", "pf", "st", "ml")
 
 
-def run(n_accesses: int = 20_000, link_bw_frac: float = 0.25):
-    cfg = SimConfig(link_bw_frac=link_bw_frac)
-    rows = []
-    t0 = time.time()
-    grid = fig2(cfg, workloads=WORKLOADS, schemes=SCHEMES, n_accesses=n_accesses)
-    per_call = (time.time() - t0) * 1e6 / (len(WORKLOADS) * len(SCHEMES))
-    slow = slowdowns(grid)
-    for w in WORKLOADS:
-        for s in SCHEMES:
-            rows.append((f"fig2/{w}/{s}", per_call, f"slowdown={slow[w][s]:.3f}"))
-    dae = [slow[w]["daemon"] for w in WORKLOADS]
-    page = [slow[w]["page"] for w in WORKLOADS]
-    import math
+def build_sweep(n_accesses: int = 20_000, link_bw_frac: float = 0.25) -> Sweep:
+    """The canonical fig2 grid (runner.fig2_spec) at benchmark sizes."""
+    return fig2_spec(SimConfig(link_bw_frac=link_bw_frac),
+                     workloads=WORKLOADS, n_accesses=n_accesses)
 
-    g = math.exp(sum(math.log(p / d) for p, d in zip(page, dae)) / len(dae))
-    rows.append((f"fig2/geomean_daemon_vs_page", per_call, f"speedup={g:.3f}"))
+
+def run(n_accesses: int = 20_000, link_bw_frac: float = 0.25,
+        workers: int | None = None, bench_path: str = BENCH_PATH):
+    workers = default_workers() if workers is None else workers
+    sw = build_sweep(n_accesses, link_bw_frac)
+    res = run_sweep(sw, workers=workers)
+    per_call = res.us_per_call  # per-cell sim cost, worker-count independent
+    grid = res.grid("workload", "scheme")
+    rows = []
+    for w in WORKLOADS:
+        base = grid[(w, "local")].metrics.cycles
+        for s in SCHEMES:
+            slow = grid[(w, s)].metrics.cycles / base
+            rows.append((f"fig2/{w}/{s}", per_call, f"slowdown={slow:.3f}"))
+    g = scheme_geomean(res.rows)
+    rows.append(("fig2/geomean_daemon_vs_page", per_call, f"speedup={g:.3f}"))
+    write_bench(bench_path, res, derived={
+        "daemon_vs_page_geomean": g,
+        "link_bw_frac": link_bw_frac,
+        "normalization": "cycles / cycles(local) per workload",
+    })
     return rows
+
+
+def compare(n_accesses: int = 20_000, link_bw_frac: float = 0.25,
+            workers: int | None = None) -> dict:
+    """Serial vs parallel on the same grid: identical Metrics, wall speedup."""
+    workers = default_workers() if workers is None else workers
+    sw = build_sweep(n_accesses, link_bw_frac)
+    serial = run_sweep(sw, workers=1)
+    par = run_sweep(sw, workers=workers)
+    identical = all(
+        a.metrics.as_dict() == b.metrics.as_dict()
+        for a, b in zip(serial.rows, par.rows)
+    )
+    return {
+        "cells": len(sw),
+        "workers": par.workers,
+        "serial_s": serial.wall_s,
+        "parallel_s": par.wall_s,
+        "speedup": serial.wall_s / max(par.wall_s, 1e-9),
+        "identical": identical,
+    }
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--compare", action="store_true",
+                    help="serial-vs-parallel parity + speedup check")
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--n-accesses", type=int, default=20_000)
+    ap.add_argument("--link-bw-frac", type=float, default=0.25)
+    args = ap.parse_args()
+    if args.compare:
+        r = compare(args.n_accesses, args.link_bw_frac, args.workers)
+        print(f"cells={r['cells']} workers={r['workers']} "
+              f"serial={r['serial_s']:.2f}s parallel={r['parallel_s']:.2f}s "
+              f"speedup={r['speedup']:.2f}x identical={r['identical']}")
+        if not r["identical"]:
+            raise SystemExit("parallel sweep diverged from serial sweep")
+        return
+    for tag, us, derived in run(args.n_accesses, args.link_bw_frac, args.workers):
+        print(f"{tag},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

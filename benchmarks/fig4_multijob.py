@@ -1,22 +1,46 @@
 """Paper Fig. 4 (bottom): multiple applications sharing one CC + MC — DaeMon
-vs page under interference."""
+vs page under interference.  One Sweep over workload x scheme at n_jobs=4,
+run on the parallel sweep engine and merged into BENCH_sim.json.
+"""
 from __future__ import annotations
 
-import time
+import os
+import sys
 
-from repro.core.sim import fig4_bottom
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core.sim import default_workers, fig4_bottom_spec, run_sweep, scheme_geomean, write_bench
+
+from benchmarks import BENCH_PATH
+
+N_JOBS = 4
 
 
-def run(n_accesses: int = 15_000):
-    t0 = time.time()
-    rows_raw = fig4_bottom(workloads=("pr", "nw", "dr", "st"), n_jobs=4,
-                           n_accesses=n_accesses)
-    per_call = (time.time() - t0) * 1e6 / max(len(rows_raw), 1)
-    return [
-        (
-            f"fig4bot/{r['workload']}/jobs{r['n_jobs']}",
-            per_call,
-            f"speedup={r['speedup']:.3f};cost_ratio={r['access_cost_ratio']:.3f}",
+def run(n_accesses: int = 15_000, workers: int | None = None,
+        bench_path: str = BENCH_PATH):
+    workers = default_workers() if workers is None else workers
+    sw = fig4_bottom_spec(workloads=("pr", "nw", "dr", "st"), n_jobs=N_JOBS,
+                          n_accesses=n_accesses)
+    res = run_sweep(sw, workers=workers)
+    per_call = res.us_per_call  # per-cell sim cost, worker-count independent
+    g = res.grid("workload", "scheme")
+    rows = []
+    for w in sw.axes["workload"]:
+        mp, md = g[(w, "page")].metrics, g[(w, "daemon")].metrics
+        rows.append(
+            (
+                f"fig4bot/{w}/jobs{N_JOBS}",
+                per_call,
+                f"speedup={mp.cycles / md.cycles:.3f};"
+                f"cost_ratio={mp.avg_access_cost / max(md.avg_access_cost, 1e-9):.3f}",
+            )
         )
-        for r in rows_raw
-    ]
+    write_bench(bench_path, res,
+                derived={"daemon_vs_page_geomean": scheme_geomean(res.rows),
+                         "n_jobs": N_JOBS})
+    return rows
+
+
+if __name__ == "__main__":
+    for tag, us, derived in run():
+        print(f"{tag},{us:.1f},{derived}")

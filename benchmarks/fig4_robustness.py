@@ -1,28 +1,122 @@
-"""Paper Fig. 4 (top): DaeMon's speedup over the page scheme across network
-bandwidths, MC counts, and applications."""
+"""Paper Fig. 4 (top) + scenario-axis sweeps: DaeMon's speedup over the page
+scheme across network bandwidths, MC counts, and applications — plus the two
+regimes the paper motivates but cannot grid serially: time-varying link
+bandwidth (jitter) and multi-MC page interleaving.
+
+Each grid is one declarative Sweep run on the parallel sweep engine; results
+merge into BENCH_sim.json (docs/SWEEPS.md).
+"""
 from __future__ import annotations
 
-import time
+import os
+import sys
 
-from repro.core.sim import fig4_top
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core.sim import (
+    SimConfig,
+    Sweep,
+    default_workers,
+    fig4_top_spec,
+    run_sweep,
+    scheme_geomean,
+    scheme_ratio,
+    write_bench,
+)
+
+from benchmarks import BENCH_PATH
+
+WORKLOADS = ("pr", "nw", "st", "ml")
 
 
-def run(n_accesses: int = 15_000):
-    t0 = time.time()
-    rows_raw = fig4_top(
-        workloads=("pr", "nw", "st", "ml"),
-        bw_fracs=(0.5, 0.25, 0.125),
-        n_mcs_list=(1, 2, 4),
+def run(n_accesses: int = 15_000, workers: int | None = None,
+        bench_path: str = BENCH_PATH):
+    """Fig. 4 top: workload x link bandwidth x MC count, page vs daemon."""
+    workers = default_workers() if workers is None else workers
+    sw = fig4_top_spec(workloads=WORKLOADS, n_accesses=n_accesses)
+    res = run_sweep(sw, workers=workers)
+    per_call = res.us_per_call  # per-cell sim cost, worker-count independent
+    g = res.grid("workload", "link_bw_frac", "n_mcs", "scheme")
+    rows = []
+    for w in sw.axes["workload"]:
+        for bw in sw.axes["link_bw_frac"]:
+            for n_mcs in sw.axes["n_mcs"]:
+                mp = g[(w, bw, n_mcs, "page")].metrics
+                md = g[(w, bw, n_mcs, "daemon")].metrics
+                rows.append(
+                    (
+                        f"fig4top/{w}/bw{bw}/mc{n_mcs}",
+                        per_call,
+                        f"speedup={mp.cycles / md.cycles:.3f};"
+                        f"cost_ratio={mp.avg_access_cost / max(md.avg_access_cost, 1e-9):.3f}",
+                    )
+                )
+    write_bench(bench_path, res,
+                derived={"daemon_vs_page_geomean": scheme_geomean(res.rows)})
+    return rows
+
+
+def _run_axis_sweep(sw: Sweep, axis: str, tag: str, derived_key: str,
+                    workers: int | None, bench_path: str):
+    """Shared body of the scenario-axis sections: run the sweep, report the
+    daemon-vs-page geomean per value of ``axis`` (plus per-workload ratios),
+    and merge into the ledger."""
+    workers = default_workers() if workers is None else workers
+    res = run_sweep(sw, workers=workers)
+    per_call = res.us_per_call  # per-cell sim cost, worker-count independent
+    rows, derived = [], {}
+    for v in sw.axes[axis]:
+        sub = res.filter(**{axis: v})
+        g = scheme_geomean(sub)
+        derived[f"daemon_vs_page_geomean@{derived_key}={v}"] = g
+        rows.append((f"{tag}/{axis}{v}/geomean_daemon_vs_page", per_call,
+                     f"speedup={g:.3f}"))
+        for key, ratio in sorted(scheme_ratio(sub).items()):
+            w = dict(key)["workload"]
+            rows.append((f"{tag}/{w}/{axis}{v}", per_call,
+                         f"speedup={ratio:.3f}"))
+    write_bench(bench_path, res, derived=derived)
+    return rows
+
+
+def run_jitter(n_accesses: int = 15_000, workers: int | None = None,
+               bench_path: str = BENCH_PATH):
+    """Scenario axis (a): bandwidth jitter (fabric congestion).  Every link's
+    available bandwidth dips each epoch (multiplier 1 - j*U[0,1)); DaeMon's
+    decoupled queues should degrade less than the page FIFO as j grows."""
+    sw = Sweep(
+        name="sweep_jitter",
+        axes={
+            "workload": WORKLOADS,
+            "bw_jitter": (0.0, 0.25, 0.5),
+            "scheme": ("page", "daemon"),
+        },
+        base=SimConfig(link_bw_frac=0.125, jitter_period=20_000),
         n_accesses=n_accesses,
     )
-    per_call = (time.time() - t0) * 1e6 / max(len(rows_raw), 1)
-    rows = []
-    for r in rows_raw:
-        rows.append(
-            (
-                f"fig4top/{r['workload']}/bw{r['bw_frac']}/mc{r['n_mcs']}",
-                per_call,
-                f"speedup={r['speedup']:.3f};cost_ratio={r['access_cost_ratio']:.3f}",
-            )
-        )
-    return rows
+    return _run_axis_sweep(sw, "bw_jitter", "jitter", "jitter",
+                           workers, bench_path)
+
+
+def run_nmcs(n_accesses: int = 15_000, workers: int | None = None,
+             bench_path: str = BENCH_PATH):
+    """Scenario axis (b): multi-MC scaling with hashed page interleaving —
+    pages (and the line fetches into them) spread across n_mcs independent
+    links instead of aliasing onto a few."""
+    sw = Sweep(
+        name="sweep_nmcs",
+        axes={
+            "workload": WORKLOADS,
+            "n_mcs": (1, 2, 4),
+            "scheme": ("page", "daemon"),
+        },
+        base=SimConfig(link_bw_frac=0.125, mc_interleave="hash"),
+        n_accesses=n_accesses,
+    )
+    return _run_axis_sweep(sw, "n_mcs", "nmcs", "n_mcs", workers, bench_path)
+
+
+if __name__ == "__main__":
+    for fn in (run, run_jitter, run_nmcs):
+        for tag, us, derived in fn():
+            print(f"{tag},{us:.1f},{derived}")

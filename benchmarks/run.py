@@ -1,20 +1,60 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+# Simulator sections run as declarative Sweeps on the parallel sweep engine
+# (docs/SWEEPS.md) and merge their grids into BENCH_sim.json at the repo
+# root.  ``--quick`` shrinks every grid for CI smoke runs; ``--only`` selects
+# sections by name.
 from __future__ import annotations
 
+import os
 import sys
+
+# support both `python -m benchmarks.run` and `python benchmarks/run.py`
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
-    from benchmarks import bench_kernels, fig2_schemes, fig4_multijob, fig4_robustness, roofline
+    import argparse
 
-    print("name,us_per_call,derived")
+    from benchmarks import (
+        bench_kernels,
+        fig2_schemes,
+        fig4_multijob,
+        fig4_robustness,
+        roofline,
+    )
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny grids (CI smoke): 10x fewer simulated accesses")
+    ap.add_argument("--only", default="",
+                    help="comma-separated section names to run")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="sweep worker processes (default: all cores)")
+    args = ap.parse_args()
+
+    n_fig2 = 2_000 if args.quick else 20_000
+    n_fig4 = 1_500 if args.quick else 15_000
+    w = args.workers
     sections = [
-        ("fig2", fig2_schemes.run),
-        ("fig4_top", fig4_robustness.run),
-        ("fig4_bottom", fig4_multijob.run),
+        ("fig2", lambda: fig2_schemes.run(n_accesses=n_fig2, workers=w)),
+        ("fig4_top", lambda: fig4_robustness.run(n_accesses=n_fig4, workers=w)),
+        ("fig4_bottom", lambda: fig4_multijob.run(n_accesses=n_fig4, workers=w)),
+        ("sweep_jitter", lambda: fig4_robustness.run_jitter(n_accesses=n_fig4, workers=w)),
+        ("sweep_nmcs", lambda: fig4_robustness.run_nmcs(n_accesses=n_fig4, workers=w)),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]
+    if args.only:
+        keep = {s.strip() for s in args.only.split(",") if s.strip()}
+        known = {s[0] for s in sections}
+        unknown = keep - known
+        if unknown:
+            sys.exit(f"unknown --only section(s) {sorted(unknown)}; "
+                     f"choose from {sorted(known)}")
+        sections = [s for s in sections if s[0] in keep]
+
+    print("name,us_per_call,derived")
     failures = 0
     for name, fn in sections:
         try:

@@ -1,18 +1,36 @@
 from repro.core.sim.config import SCHEMES, Metrics, SimConfig
-from repro.core.sim.engine import Simulator, simulate
+from repro.core.sim.engine import LinkSchedule, Simulator, simulate
 from repro.core.sim.runner import (
     fig2,
+    fig2_spec,
+    fig2_sweep,
     fig4_bottom,
+    fig4_bottom_spec,
     fig4_top,
+    fig4_top_spec,
     geomean,
     paper_claims,
     run_one,
     slowdowns,
 )
+from repro.core.sim.sweep import (
+    CellResult,
+    Sweep,
+    SweepResult,
+    cell_seed,
+    default_workers,
+    run_sweep,
+    scheme_geomean,
+    scheme_ratio,
+    write_bench,
+)
 from repro.core.sim.trace import WORKLOADS, generate
 
 __all__ = [
-    "SCHEMES", "Metrics", "SimConfig", "Simulator", "simulate",
-    "fig2", "fig4_bottom", "fig4_top", "geomean", "paper_claims",
+    "SCHEMES", "Metrics", "SimConfig", "Simulator", "simulate", "LinkSchedule",
+    "fig2", "fig2_spec", "fig2_sweep", "fig4_bottom", "fig4_bottom_spec",
+    "fig4_top", "fig4_top_spec", "geomean", "paper_claims",
     "run_one", "slowdowns", "WORKLOADS", "generate",
+    "CellResult", "Sweep", "SweepResult", "cell_seed", "default_workers",
+    "run_sweep", "scheme_geomean", "scheme_ratio", "write_bench",
 ]

@@ -35,6 +35,22 @@ class SimConfig:
     link_bw_frac: float = 0.25  # network bw = frac * bus bw (1/2 .. 1/8)
     net_lat: int = 3000  # one-way propagation+protocol (~1 us)
     remote_mem_lat: int = 300  # DRAM access at the MC
+    # page/line -> MC link placement (§2.3 of DESIGN.md):
+    #   "page"   — page-granular modulo interleave (legacy default)
+    #   "hash"   — page-granular multiplicative-hash interleave (stride-proof)
+    #   "single" — all traffic on MC 0 (degenerate shared-FIFO baseline)
+    mc_interleave: str = "page"
+
+    # scenario axis: time-varying network (§5 of DESIGN.md).  Models fabric
+    # congestion: each link resamples per ``jitter_period`` cycles an
+    # *available*-bandwidth multiplier 1 - bw_jitter*U[0,1) (floored at 0.05;
+    # capacity is the ceiling, dips below it) and a latency multiplier
+    # 1 + lat_jitter*U[0,1) (propagation is the floor, queueing adds to it).
+    # Zero jitter is the exact legacy fixed-network model.
+    bw_jitter: float = 0.0
+    lat_jitter: float = 0.0
+    jitter_period: int = 20_000  # cycles per variability epoch (~6.7 us)
+    jitter_seed: int = 0
 
     # DaeMon
     line_share: float = 0.6  # bandwidth fraction reserved for the sub-block queue
@@ -85,11 +101,20 @@ class Metrics:
             "workload": self.workload,
             "cycles": self.cycles,
             "avg_access_cost": self.avg_access_cost,
+            "accesses": self.accesses,
             "net_bytes": self.net_bytes,
             "pages_moved": self.pages_moved,
             "lines_moved": self.lines_moved,
             "llc_hits": self.llc_hits,
             "local_hits": self.local_hits,
             "remote_misses": self.remote_misses,
+            "miss_latency_sum": self.miss_latency_sum,
+            "stall_cycles": self.stall_cycles,
             "bytes_saved_compression": self.bytes_saved_compression,
         }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Metrics":
+        """Inverse of :meth:`as_dict` (derived keys are ignored)."""
+        fields = {k: v for k, v in d.items() if k in cls.__dataclass_fields__}
+        return cls(**fields)

@@ -15,6 +15,12 @@ critical lines queue behind concurrently-moved pages — the paper's core
 pathology).  DaeMon's link is a fluid dual-queue: when both queues are busy
 the sub-block queue drains at a fixed ``line_share`` of the bandwidth, i.e.
 the paper's queue controller serving lines at a higher predefined fixed rate.
+
+Scenario axes (DESIGN.md §5): every link optionally carries a
+:class:`LinkSchedule` — a piecewise-constant per-epoch bandwidth/latency
+multiplier modeling the runtime network variability the paper stresses — and
+pages/lines are interleaved across ``n_mcs`` independent MC links per
+``SimConfig.mc_interleave`` (DESIGN.md §2.3).
 """
 from __future__ import annotations
 
@@ -93,18 +99,84 @@ class LRU:
 # --------------------------------------------------------------------------
 
 
+class LinkSchedule:
+    """Time-varying network model (DESIGN.md §5): piecewise-constant
+    multipliers resampled once per ``period`` cycles, modeling fabric
+    congestion — available bandwidth dips below nominal capacity
+    (mult = 1 - bw_jitter*U[0,1), floored at 0.05) and latency spikes above
+    the propagation floor (mult = 1 + lat_jitter*U[0,1)).
+
+    Multipliers are a pure function of (seed, epoch index), so the "network
+    weather" is identical across schemes, runs, and worker processes — a fair
+    A/B environment by construction.  With both jitters zero the schedule is
+    inert and links reproduce the legacy fixed-network results bit-for-bit.
+    """
+
+    __slots__ = ("period", "bw_jitter", "lat_jitter", "seed", "_cache")
+
+    def __init__(self, period: int, bw_jitter: float, lat_jitter: float, seed: int = 0):
+        self.period = max(1, int(period))
+        self.bw_jitter = float(bw_jitter)
+        self.lat_jitter = float(lat_jitter)
+        self.seed = seed
+        self._cache: Dict[int, Tuple[float, float]] = {}
+
+    @property
+    def bw_active(self) -> bool:
+        return self.bw_jitter > 0.0
+
+    @property
+    def lat_active(self) -> bool:
+        return self.lat_jitter > 0.0
+
+    def _mults(self, epoch: int) -> Tuple[float, float]:
+        m = self._cache.get(epoch)
+        if m is None:
+            rng = np.random.default_rng((self.seed, epoch))
+            bw = max(0.05, 1.0 - self.bw_jitter * rng.random())
+            lat = 1.0 + self.lat_jitter * rng.random()
+            m = self._cache[epoch] = (bw, lat)
+        return m
+
+    def bw_mult(self, t: float) -> float:
+        return self._mults(int(t // self.period))[0] if self.bw_active else 1.0
+
+    def lat_mult(self, t: float) -> float:
+        return self._mults(int(t // self.period))[1] if self.lat_active else 1.0
+
+    def next_boundary(self, t: float) -> float:
+        return (int(t // self.period) + 1) * float(self.period)
+
+
 class FifoLink:
     """Store-and-forward FIFO: one queue, transfers fully serialize."""
 
-    def __init__(self, eng: Engine, bw: float):
+    def __init__(self, eng: Engine, bw: float, sched: Optional[LinkSchedule] = None):
         self.eng = eng
         self.bw = bw
+        self.sched = sched
         self.busy_until = 0.0
         self.bytes = 0.0
 
+    def _finish(self, start: float, size: float) -> float:
+        """Completion time of ``size`` bytes starting at ``start``, integrating
+        the piecewise-constant bandwidth schedule across epoch boundaries."""
+        sched = self.sched
+        if sched is None or not sched.bw_active:
+            return start + size / self.bw
+        t, rem = start, size
+        while True:
+            bw = self.bw * sched.bw_mult(t)
+            nb = sched.next_boundary(t)
+            cap = bw * (nb - t)
+            if rem <= cap:
+                return t + rem / bw
+            rem -= cap
+            t = nb
+
     def send(self, t: float, size: float, cb: Callable[[float], None], cls: str = "line"):
         start = max(t, self.busy_until)
-        done = start + size / self.bw
+        done = self._finish(start, size)
         self.busy_until = done
         self.bytes += size
         self.eng.at(done, cb)
@@ -116,9 +188,11 @@ class DualQueueLink:
     serialize FIFO; across queues the line queue gets ``line_share`` of the
     bandwidth whenever it is non-empty (and all of it when pages are idle)."""
 
-    def __init__(self, eng: Engine, bw: float, line_share: float):
+    def __init__(self, eng: Engine, bw: float, line_share: float,
+                 sched: Optional[LinkSchedule] = None):
         self.eng = eng
         self.bw = bw
+        self.sched = sched
         self.share = {"line": line_share, "page": 1.0 - line_share}
         self.q: Dict[str, deque] = {"line": deque(), "page": deque()}
         self.head_rem: Dict[str, float] = {"line": 0.0, "page": 0.0}
@@ -127,27 +201,39 @@ class DualQueueLink:
         self.epoch = 0
         self.bytes = 0.0
 
-    def _rates(self) -> Dict[str, float]:
+    def _bw_at(self, t: float) -> float:
+        s = self.sched
+        return self.bw * s.bw_mult(t) if s is not None and s.bw_active else self.bw
+
+    def _rates(self, t: float) -> Dict[str, float]:
         active = [c for c in ("line", "page") if self.head_rem[c] > 0]
         if not active:
             return {"line": 0.0, "page": 0.0}
+        bw = self._bw_at(t)
         if len(active) == 2:
-            return {c: self.share[c] * self.bw for c in active}
-        return {active[0]: self.bw, ("page" if active[0] == "line" else "line"): 0.0}
+            return {c: self.share[c] * bw for c in active}
+        return {active[0]: bw, ("page" if active[0] == "line" else "line"): 0.0}
 
     def _advance(self, t: float):
-        dt = t - self.last
-        if dt > 0:
-            rates = self._rates()
-            for c in ("line", "page"):
-                if self.head_rem[c] > 0:
-                    self.head_rem[c] = max(0.0, self.head_rem[c] - rates[c] * dt)
-        self.last = t
+        sched = self.sched
+        varying = sched is not None and sched.bw_active
+        if self.head_rem["line"] <= 0 and self.head_rem["page"] <= 0:
+            self.last = max(self.last, t)  # idle link: skip epoch walking
+            return
+        while self.last < t:
+            seg_end = min(t, sched.next_boundary(self.last)) if varying else t
+            dt = seg_end - self.last
+            if dt > 0:
+                rates = self._rates(self.last)
+                for c in ("line", "page"):
+                    if self.head_rem[c] > 0:
+                        self.head_rem[c] = max(0.0, self.head_rem[c] - rates[c] * dt)
+            self.last = seg_end
 
     def _schedule(self, t: float):
         self.epoch += 1
         epoch = self.epoch
-        rates = self._rates()
+        rates = self._rates(t)
         best = None
         for c in ("line", "page"):
             if self.head_rem[c] > 0 and rates[c] > 0:
@@ -157,6 +243,13 @@ class DualQueueLink:
         if best is None:
             return
         eta, c = best
+        # ETAs computed with this epoch's rate are invalid past the next
+        # bandwidth-schedule boundary: fire there instead and re-derive the
+        # rates (the fire handler reschedules any unfinished head).
+        if self.sched is not None and self.sched.bw_active:
+            nb = self.sched.next_boundary(t)
+            if eta > nb:
+                eta = nb
 
         def fire(tt: float, _c=c, _epoch=epoch):
             if _epoch != self.epoch:
@@ -262,13 +355,22 @@ class Simulator:
         self.local = LRU(max(1, int(n_pages_total * cfg.local_mem_frac)))
         self.lines_per_page = cfg.page_bytes // cfg.line_bytes
 
+        if cfg.mc_interleave not in ("page", "hash", "single"):
+            raise ValueError(f"mc_interleave={cfg.mc_interleave!r}")
+        # per-MC variability schedules: seeded by (jitter_seed, mc) only, so
+        # every scheme sees the same network weather (fair A/B comparison)
+        self.scheds = [
+            LinkSchedule(cfg.jitter_period, cfg.bw_jitter, cfg.lat_jitter,
+                         seed=cfg.jitter_seed * 1000 + i)
+            for i in range(cfg.n_mcs)
+        ]
         # per-MC links (downlink data path; request path folded into net_lat)
         mk = (
-            (lambda: DualQueueLink(self.eng, cfg.link_bw, cfg.line_share))
+            (lambda s: DualQueueLink(self.eng, cfg.link_bw, cfg.line_share, s))
             if scheme == "daemon"
-            else (lambda: FifoLink(self.eng, cfg.link_bw))
+            else (lambda s: FifoLink(self.eng, cfg.link_bw, s))
         )
-        self.links = [mk() for _ in range(cfg.n_mcs)]
+        self.links = [mk(s) for s in self.scheds]
 
         # pending remote fetches (coalescing)
         self.pending_lines: Dict[int, List[Request]] = {}
@@ -284,7 +386,22 @@ class Simulator:
         return line // self.lines_per_page
 
     def mc_of(self, page: int) -> int:
-        return page % self.cfg.n_mcs
+        """Page -> MC link placement (DESIGN.md §2.3).  A page lives at one
+        MC, so its page movement AND the line fetches into it share a link;
+        distinct pages spread across independent links per the policy."""
+        n = self.cfg.n_mcs
+        if n <= 1:
+            return 0
+        mode = self.cfg.mc_interleave
+        if mode == "single":
+            return 0
+        if mode == "hash":  # Fibonacci hash: immune to power-of-two strides
+            return (((page * 0x9E3779B1) & 0xFFFFFFFF) >> 7) % n
+        return page % n
+
+    def net_lat(self, mc: int, t: float) -> float:
+        """One-way network latency on MC link ``mc`` at time ``t``."""
+        return self.cfg.net_lat * self.scheds[mc].lat_mult(t)
 
     # ---------------- core execution ----------------
     def start(self):
@@ -414,12 +531,13 @@ class Simulator:
         self.pending_lines[line] = [req] if req is not None else []
         self.m.lines_moved += 1
         page = self.page_of(line)
-        link = self.links[self.mc_of(page)]
+        mc = self.mc_of(page)
+        link = self.links[mc]
         size = cfg.line_bytes + cfg.header_bytes
-        depart_mc = t + cfg.net_lat + cfg.remote_mem_lat
+        depart_mc = t + self.net_lat(mc, t) + cfg.remote_mem_lat
 
         def on_tx_done(tt: float):
-            arrive = tt + cfg.net_lat
+            arrive = tt + self.net_lat(mc, tt)
             self.eng.at(arrive, lambda a: self._on_line_arrival(line, a))
 
         self.eng.at(depart_mc, lambda tt: link.send(tt, size, on_tx_done, "line"))
@@ -427,7 +545,8 @@ class Simulator:
 
     def _send_page(self, page: int, t: float, writeback: bool = False):
         cfg = self.cfg
-        link = self.links[self.mc_of(page)]
+        mc = self.mc_of(page)
+        link = self.links[mc]
         raw = cfg.page_bytes + cfg.header_bytes
         size = raw
         extra = 0.0
@@ -447,10 +566,10 @@ class Simulator:
             self.eng.at(depart, lambda tt: link.send(tt, size, lambda a: None, "page"))
             return
         self.m.pages_moved += 1
-        depart_mc = t + cfg.net_lat + cfg.remote_mem_lat + extra
+        depart_mc = t + self.net_lat(mc, t) + cfg.remote_mem_lat + extra
 
         def on_tx_done(tt: float):
-            arrive = tt + cfg.net_lat + (cfg.decomp_lat / 4 if extra else 0.0)
+            arrive = tt + self.net_lat(mc, tt) + (cfg.decomp_lat / 4 if extra else 0.0)
             self.eng.at(arrive, lambda a: self._on_page_arrival(page, a))
 
         self.eng.at(depart_mc, lambda tt: link.send(tt, size, on_tx_done, "page"))
@@ -526,13 +645,14 @@ class Simulator:
         cfg = self.cfg
         self.m.lines_moved += 1
         page = self.page_of(line)
-        link = self.links[self.mc_of(page)]
+        mc = self.mc_of(page)
+        link = self.links[mc]
         size = cfg.line_bytes + cfg.header_bytes
         self.m.net_bytes += size
-        depart_mc = t + cfg.net_lat + cfg.remote_mem_lat
+        depart_mc = t + self.net_lat(mc, t) + cfg.remote_mem_lat
 
         def on_tx_done(tt: float):
-            arrive = tt + cfg.net_lat
+            arrive = tt + self.net_lat(mc, tt)
             self.eng.at(arrive, lambda a: self._on_line_arrival(line, a))
 
         self.eng.at(depart_mc, lambda tt: link.send(tt, size, on_tx_done, "line"))

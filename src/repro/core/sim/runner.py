@@ -1,5 +1,9 @@
 """Public simulation API + the paper's experiment sweeps.
 
+Every figure is one declarative :class:`~repro.core.sim.sweep.Sweep` executed
+by the parallel sweep engine (DESIGN.md §6); pass ``workers=N`` to fan cells
+out over a process pool (results are identical to the serial run).
+
   run_one(workload, scheme, ...)          -> Metrics
   fig2(...)   scheme x workload grid      (paper Fig. 2)
   fig4_top(...) bw x n_mcs x workload     (paper Fig. 4 top)
@@ -8,52 +12,82 @@
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, Iterable, List, Optional
 
 from repro.core.sim.config import SCHEMES, Metrics, SimConfig
-from repro.core.sim.engine import simulate
-from repro.core.sim.trace import WORKLOADS, generate
+from repro.core.sim.sweep import (
+    Sweep,
+    SweepResult,
+    geomean,
+    run_one,
+    run_sweep,
+    scheme_ratio,
+)
+from repro.core.sim.trace import WORKLOADS
 
 DEFAULT_WORKLOADS = tuple(WORKLOADS)
 
 
-def run_one(
-    workload: str,
-    scheme: str,
-    cfg: Optional[SimConfig] = None,
-    *,
-    seed: int = 0,
-    n_accesses: int = 60_000,
-    footprint: int = 16 << 20,
-    n_jobs: int = 1,
-) -> Metrics:
-    """One application = cfg.n_cores threads of the workload (multicore CC);
-    n_jobs > 1 stacks additional independent applications on the same CC."""
-    cfg = cfg or SimConfig()
-    n_threads = max(1, cfg.n_cores) * max(1, n_jobs)
-    per = max(1, n_accesses // n_threads)
-    traces = [generate(workload, seed=seed + j, footprint=footprint, n=per)
-              for j in range(n_threads)]
-    return simulate(cfg, scheme, traces, workload=workload, seed=seed)
-
-
-def geomean(xs: Iterable[float]) -> float:
-    xs = [max(x, 1e-12) for x in xs]
-    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+def _sweep_kw(kw: dict) -> dict:
+    """Map run_one-style kwargs (seed/n_accesses/footprint) onto the
+    corresponding Sweep fields; n_jobs is a per-figure axis, not mapped here."""
+    out = {}
+    if "n_accesses" in kw:
+        out["n_accesses"] = kw.pop("n_accesses")
+    if "footprint" in kw:
+        out["footprint"] = kw.pop("footprint")
+    if "seed" in kw:
+        out["base_seed"] = kw.pop("seed")
+    if kw:
+        raise TypeError(f"unexpected kwargs: {sorted(kw)}")
+    return out
 
 
 def fig2(
     cfg: Optional[SimConfig] = None,
     workloads: Iterable[str] = DEFAULT_WORKLOADS,
     schemes: Iterable[str] = SCHEMES,
+    *,
+    workers: Optional[int] = None,
+    n_jobs: int = 1,
     **kw,
 ) -> Dict[str, Dict[str, Metrics]]:
     """Slowdown grid: scheme x workload (normalize to 'local' outside)."""
-    out: Dict[str, Dict[str, Metrics]] = {}
-    for w in workloads:
-        out[w] = {s: run_one(w, s, cfg, **kw) for s in schemes}
+    res = fig2_sweep(cfg, workloads, schemes, workers=workers, n_jobs=n_jobs, **kw)
+    out: Dict[str, Dict[str, Metrics]] = {w: {} for w in res.axes["workload"]}
+    for r in res.rows:
+        out[r.axes["workload"]][r.axes["scheme"]] = r.metrics
     return out
+
+
+def fig2_spec(
+    cfg: Optional[SimConfig] = None,
+    workloads: Iterable[str] = DEFAULT_WORKLOADS,
+    schemes: Iterable[str] = SCHEMES,
+    *,
+    n_jobs: int = 1,
+    **kw,
+) -> Sweep:
+    """The canonical Fig. 2 grid declaration (shared by the API and the
+    benchmark script, so the 'fig2' BENCH_sim.json entry has one meaning)."""
+    axes = {"workload": tuple(workloads), "scheme": tuple(schemes)}
+    if n_jobs != 1:
+        axes["n_jobs"] = (n_jobs,)
+    return Sweep(name="fig2", axes=axes, base=cfg or SimConfig(), **_sweep_kw(kw))
+
+
+def fig2_sweep(
+    cfg: Optional[SimConfig] = None,
+    workloads: Iterable[str] = DEFAULT_WORKLOADS,
+    schemes: Iterable[str] = SCHEMES,
+    *,
+    workers: Optional[int] = None,
+    n_jobs: int = 1,
+    **kw,
+) -> SweepResult:
+    """The Fig. 2 grid as an executed SweepResult (rows carry full Metrics)."""
+    return run_sweep(fig2_spec(cfg, workloads, schemes, n_jobs=n_jobs, **kw),
+                     workers=workers)
 
 
 def slowdowns(grid: Dict[str, Dict[str, Metrics]]) -> Dict[str, Dict[str, float]]:
@@ -65,20 +99,51 @@ def slowdowns(grid: Dict[str, Dict[str, Metrics]]) -> Dict[str, Dict[str, float]
     return out
 
 
+def fig4_top_spec(
+    workloads: Iterable[str] = ("pr", "dr", "st", "nw"),
+    bw_fracs: Iterable[float] = (0.5, 0.25, 0.125),
+    n_mcs_list: Iterable[int] = (1, 2, 4),
+    *,
+    cfg: Optional[SimConfig] = None,
+    n_jobs: int = 1,
+    **kw,
+) -> Sweep:
+    """The canonical Fig. 4 (top) grid declaration (shared by the API and
+    the benchmark script, so the 'fig4_top' BENCH_sim.json entry has one
+    meaning)."""
+    axes = {
+        "workload": tuple(workloads),
+        "link_bw_frac": tuple(bw_fracs),
+        "n_mcs": tuple(n_mcs_list),
+        "scheme": ("page", "daemon"),
+    }
+    if n_jobs != 1:
+        axes["n_jobs"] = (n_jobs,)
+    return Sweep(name="fig4_top", axes=axes, base=cfg or SimConfig(),
+                 **_sweep_kw(kw))
+
+
 def fig4_top(
     workloads: Iterable[str] = ("pr", "dr", "st", "nw"),
     bw_fracs: Iterable[float] = (0.5, 0.25, 0.125),
     n_mcs_list: Iterable[int] = (1, 2, 4),
+    *,
+    cfg: Optional[SimConfig] = None,
+    workers: Optional[int] = None,
+    n_jobs: int = 1,
     **kw,
 ) -> List[dict]:
     """Speedup of daemon over page across network/MC configurations."""
+    sw = fig4_top_spec(workloads, bw_fracs, n_mcs_list, cfg=cfg,
+                       n_jobs=n_jobs, **kw)
+    res = run_sweep(sw, workers=workers)
+    g = res.grid("workload", "link_bw_frac", "n_mcs", "scheme")
     rows = []
-    for w in workloads:
-        for bw in bw_fracs:
-            for n_mcs in n_mcs_list:
-                cfg = SimConfig(link_bw_frac=bw, n_mcs=n_mcs)
-                mp = run_one(w, "page", cfg, **kw)
-                md = run_one(w, "daemon", cfg, **kw)
+    for w in sw.axes["workload"]:
+        for bw in sw.axes["link_bw_frac"]:
+            for n_mcs in sw.axes["n_mcs"]:
+                mp = g[(w, bw, n_mcs, "page")].metrics
+                md = g[(w, bw, n_mcs, "daemon")].metrics
                 rows.append(
                     {
                         "workload": w,
@@ -92,16 +157,38 @@ def fig4_top(
     return rows
 
 
+def fig4_bottom_spec(
+    workloads: Iterable[str] = ("pr", "dr", "st", "nw"),
+    n_jobs: int = 4,
+    *,
+    cfg: Optional[SimConfig] = None,
+    **kw,
+) -> Sweep:
+    """The canonical Fig. 4 (bottom) grid declaration."""
+    return Sweep(
+        name="fig4_bottom",
+        axes={"workload": tuple(workloads), "scheme": ("page", "daemon"),
+              "n_jobs": (n_jobs,)},
+        base=cfg or SimConfig(),
+        **_sweep_kw(kw),
+    )
+
+
 def fig4_bottom(
     workloads: Iterable[str] = ("pr", "dr", "st", "nw"),
     n_jobs: int = 4,
+    *,
+    cfg: Optional[SimConfig] = None,
+    workers: Optional[int] = None,
     **kw,
 ) -> List[dict]:
     """Multiple concurrent jobs on one CC sharing the network and one MC."""
+    sw = fig4_bottom_spec(workloads, n_jobs, cfg=cfg, **kw)
+    res = run_sweep(sw, workers=workers)
+    g = res.grid("workload", "scheme")
     rows = []
-    for w in workloads:
-        mp = run_one(w, "page", n_jobs=n_jobs, **kw)
-        md = run_one(w, "daemon", n_jobs=n_jobs, **kw)
+    for w in sw.axes["workload"]:
+        mp, md = g[(w, "page")].metrics, g[(w, "daemon")].metrics
         rows.append(
             {
                 "workload": w,
@@ -114,27 +201,39 @@ def fig4_bottom(
 
 
 def paper_claims(
-    bw_fracs: Iterable[float] = (0.25, 0.125), **kw
+    bw_fracs: Iterable[float] = (0.25, 0.125),
+    *,
+    workloads: Iterable[str] = DEFAULT_WORKLOADS,
+    workers: Optional[int] = None,
+    n_jobs: int = 1,
+    **kw,
 ) -> dict:
     """Geomean daemon-vs-page improvements over the workload suite across the
     paper's network operating range — the quantities the paper reports as
     3.06x (access-cost reduction) and 2.39x (performance)."""
+    axes = {
+        "link_bw_frac": tuple(bw_fracs),
+        "workload": tuple(workloads),
+        "scheme": ("page", "daemon"),
+    }
+    if n_jobs != 1:
+        axes["n_jobs"] = (n_jobs,)
+    sw = Sweep(name="paper_claims", axes=axes, **_sweep_kw(kw))
+    res = run_sweep(sw, workers=workers)
     perf, cost, per_bw = [], [], {}
-    for bw in bw_fracs:
-        cfg = SimConfig(link_bw_frac=bw)
-        grid = fig2(cfg, schemes=("page", "daemon"), **kw)
-        p = [row["page"].cycles / row["daemon"].cycles for row in grid.values()]
-        c = [
-            row["page"].avg_access_cost / max(row["daemon"].avg_access_cost, 1e-9)
-            for row in grid.values()
-        ]
+    for bw in sw.axes["link_bw_frac"]:
+        rows = res.filter(link_bw_frac=bw)
+        p = scheme_ratio(rows, metric="cycles")
+        c = scheme_ratio(rows, metric="avg_access_cost")
         per_bw[bw] = {
-            "perf": geomean(p),
-            "cost": geomean(c),
-            "per_workload": {w: grid[w]["page"].cycles / grid[w]["daemon"].cycles for w in grid},
+            "perf": geomean(p.values()),
+            "cost": geomean(c.values()),
+            "per_workload": {
+                dict(k)["workload"]: v for k, v in p.items()
+            },
         }
-        perf += p
-        cost += c
+        perf += list(p.values())
+        cost += list(c.values())
     return {
         "perf_speedup_geomean": geomean(perf),
         "access_cost_reduction_geomean": geomean(cost),

@@ -1,0 +1,357 @@
+"""Declarative parallel sweep engine for the DS simulator (DESIGN.md §6).
+
+The paper's headline results are grids — schemes x workloads x network
+configurations — and its core claim is robustness *across* those axes.  This
+module turns every such grid into one declarative :class:`Sweep`:
+
+    sweep = Sweep(
+        name="fig2",
+        axes={"workload": ("pr", "st"), "scheme": ("page", "daemon"),
+              "link_bw_frac": (0.25, 0.125)},
+    )
+    result = run_sweep(sweep, workers=8)     # process-pool fan-out
+    result.save_json("fig2.json")            # standalone artifact
+    write_bench("BENCH_sim.json", result)    # merge into the bench ledger
+
+Axis names are ``scheme`` / ``workload`` / ``seed`` / ``n_jobs`` plus any
+:class:`SimConfig` field (``link_bw_frac``, ``n_mcs``, ``bw_jitter``, ...).
+Cells are the cartesian product in declaration order.  Each cell is an
+independent simulation with deterministic seeding (a pure function of the
+cell's axis values), so a parallel run is cell-for-cell identical to a
+serial run of the same sweep — verified by tests/test_sweep.py.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import time
+import zlib
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.sim.config import SCHEMES, Metrics, SimConfig
+from repro.core.sim.engine import simulate
+from repro.core.sim.trace import WORKLOADS, generate
+
+BENCH_SCHEMA = "repro.sim.sweep/v1"
+
+# axes consumed by the cell runner itself; everything else must be a
+# SimConfig field and is applied with cfg.with_()
+RESERVED_AXES = ("scheme", "workload", "seed", "n_jobs")
+
+
+# --------------------------------------------------------------------------
+# cell primitive
+# --------------------------------------------------------------------------
+
+
+def run_one(
+    workload: str,
+    scheme: str,
+    cfg: Optional[SimConfig] = None,
+    *,
+    seed: int = 0,
+    n_accesses: int = 60_000,
+    footprint: int = 16 << 20,
+    n_jobs: int = 1,
+) -> Metrics:
+    """One application = cfg.n_cores threads of the workload (multicore CC);
+    n_jobs > 1 stacks additional independent applications on the same CC."""
+    cfg = cfg or SimConfig()
+    n_threads = max(1, cfg.n_cores) * max(1, n_jobs)
+    per = max(1, n_accesses // n_threads)
+    traces = [generate(workload, seed=seed + j, footprint=footprint, n=per)
+              for j in range(n_threads)]
+    return simulate(cfg, scheme, traces, workload=workload, seed=seed)
+
+
+# --------------------------------------------------------------------------
+# sweep spec
+# --------------------------------------------------------------------------
+
+
+def cell_seed(axes: Mapping[str, Any], base_seed: int = 0) -> int:
+    """Deterministic per-cell seed: a pure function of the cell's axis values
+    (stable across processes, Python versions, and execution order)."""
+    blob = json.dumps({k: axes[k] for k in sorted(axes)}, sort_keys=True,
+                      default=str).encode()
+    return (base_seed + zlib.crc32(blob)) % (1 << 31)
+
+
+@dataclass(frozen=True)
+class Sweep:
+    """Declarative grid of simulator cells (cartesian product of ``axes``).
+
+    ``derive_seeds=False`` (default) runs every cell at ``base_seed`` (or the
+    explicit ``seed`` axis) — required when cells are later compared ratio-
+    style against each other on identical traces.  ``derive_seeds=True``
+    mixes a hash of the cell's axes into the seed so cells draw decorrelated
+    traces (for variance studies)."""
+
+    name: str
+    axes: Mapping[str, Sequence[Any]]
+    base: SimConfig = SimConfig()
+    n_accesses: int = 60_000  # matches run_one's default
+    footprint: int = 16 << 20
+    base_seed: int = 0
+    derive_seeds: bool = False
+
+    def __post_init__(self):
+        for k, v in self.axes.items():
+            if k not in RESERVED_AXES and k not in SimConfig.__dataclass_fields__:
+                raise ValueError(f"unknown sweep axis {k!r}")
+            if isinstance(v, (str, bytes)):
+                raise ValueError(
+                    f"axis {k!r} must be a sequence of values, not {v!r} "
+                    f"(did you mean ({v!r},)?)")
+        object.__setattr__(self, "axes", {k: tuple(v) for k, v in self.axes.items()})
+
+    def cells(self) -> List[Dict[str, Any]]:
+        keys = list(self.axes)
+        return [dict(zip(keys, combo))
+                for combo in itertools.product(*(self.axes[k] for k in keys))]
+
+    def __len__(self) -> int:
+        n = 1
+        for v in self.axes.values():
+            n *= len(v)
+        return n
+
+
+@dataclass
+class CellResult:
+    axes: Dict[str, Any]
+    metrics: Metrics
+    seed: int
+    cpu_s: float = 0.0  # this cell's own CPU time, measured inside the worker
+
+    def as_dict(self) -> dict:
+        return {"axes": self.axes, "seed": self.seed, "cpu_s": self.cpu_s,
+                "metrics": self.metrics.as_dict()}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CellResult":
+        return cls(axes=dict(d["axes"]), seed=int(d.get("seed", 0)),
+                   cpu_s=float(d.get("cpu_s", 0.0)),
+                   metrics=Metrics.from_dict(d["metrics"]))
+
+
+def _run_cell(payload: Tuple[Sweep, Dict[str, Any]]) -> CellResult:
+    """Top-level (picklable) worker: execute one sweep cell."""
+    sweep, cell = payload
+    cfg_kw = {k: v for k, v in cell.items() if k not in RESERVED_AXES}
+    cfg = sweep.base.with_(**cfg_kw) if cfg_kw else sweep.base
+    seed = int(cell.get("seed", sweep.base_seed))
+    if sweep.derive_seeds:
+        seed = cell_seed(cell, base_seed=seed)
+    t0 = time.process_time()  # CPU time: robust to pool oversubscription
+    m = run_one(
+        cell.get("workload", "pr"),
+        cell.get("scheme", "daemon"),
+        cfg,
+        seed=seed,
+        n_accesses=sweep.n_accesses,
+        footprint=sweep.footprint,
+        n_jobs=int(cell.get("n_jobs", 1)),
+    )
+    return CellResult(axes=cell, metrics=m, seed=seed,
+                      cpu_s=time.process_time() - t0)
+
+
+# --------------------------------------------------------------------------
+# execution
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class SweepResult:
+    name: str
+    axes: Dict[str, tuple]
+    rows: List[CellResult]
+    wall_s: float = 0.0
+    workers: int = 1
+    # provenance: the Sweep spec that produced the rows (base SimConfig,
+    # n_accesses, footprint, seed policy) so ledger entries are reproducible
+    spec: Optional[Dict[str, Any]] = None
+
+    def __iter__(self):
+        return iter(self.rows)
+
+    def __len__(self):
+        return len(self.rows)
+
+    @property
+    def us_per_call(self) -> float:
+        """Mean per-cell CPU time in µs, measured inside each worker — i.e.
+        simulation cost, independent of how many workers ran the sweep or how
+        oversubscribed they were (``wall_s`` is the elapsed wall-clock of the
+        whole sweep)."""
+        if not self.rows:
+            return 0.0
+        return sum(r.cpu_s for r in self.rows) * 1e6 / len(self.rows)
+
+    def filter(self, **axes) -> List[CellResult]:
+        return [r for r in self.rows
+                if all(r.axes.get(k) == v for k, v in axes.items())]
+
+    def grid(self, *keys: str) -> Dict[tuple, CellResult]:
+        """Index rows by a tuple of axis values, e.g. grid('workload','scheme')."""
+        return {tuple(r.axes[k] for k in keys): r for r in self.rows}
+
+    # -------- persistence (docs/SWEEPS.md describes the schema) --------
+    def as_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "axes": {k: list(v) for k, v in self.axes.items()},
+            "spec": self.spec,
+            "wall_s": self.wall_s,
+            "workers": self.workers,
+            "n_cells": len(self.rows),
+            "rows": [r.as_dict() for r in self.rows],
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SweepResult":
+        return cls(
+            name=d["name"],
+            axes={k: tuple(v) for k, v in d["axes"].items()},
+            rows=[CellResult.from_dict(r) for r in d["rows"]],
+            wall_s=float(d.get("wall_s", 0.0)),
+            workers=int(d.get("workers", 1)),
+            spec=d.get("spec"),
+        )
+
+    def save_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.as_dict(), f, indent=1, sort_keys=True)
+
+    @classmethod
+    def load_json(cls, path: str) -> "SweepResult":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+
+def default_workers() -> int:
+    """Worker count: REPRO_SWEEP_WORKERS env override, else the cores this
+    process may actually run on (cgroup/affinity-aware where available)."""
+    env = os.environ.get("REPRO_SWEEP_WORKERS")
+    if env:
+        return max(1, int(env))
+    try:
+        return len(os.sched_getaffinity(0)) or 1
+    except AttributeError:  # non-Linux
+        return os.cpu_count() or 1
+
+
+def run_sweep(sweep: Sweep, workers: Optional[int] = None) -> SweepResult:
+    """Execute every cell of ``sweep``; ``workers<=1`` runs serial in-process,
+    otherwise cells fan out over a process pool.  Row order always matches
+    ``sweep.cells()`` and per-cell results are independent of ``workers``."""
+    cells = sweep.cells()
+    payloads = [(sweep, c) for c in cells]
+    t0 = time.perf_counter()
+    if workers is None:
+        workers = 1
+    workers = max(1, min(workers, len(cells) or 1))
+    if workers == 1:
+        rows = [_run_cell(p) for p in payloads]
+    else:
+        # chunksize=1: cell costs vary by >10x across schemes/bandwidths, so
+        # dynamic single-cell dispatch beats static chunking; IPC cost per
+        # cell (~ms) is noise next to a cell (~100ms+)
+        with ProcessPoolExecutor(max_workers=workers) as pool:
+            rows = list(pool.map(_run_cell, payloads, chunksize=1))
+    spec = {
+        "base": asdict(sweep.base),
+        "n_accesses": sweep.n_accesses,
+        "footprint": sweep.footprint,
+        "base_seed": sweep.base_seed,
+        "derive_seeds": sweep.derive_seeds,
+    }
+    return SweepResult(name=sweep.name, axes=dict(sweep.axes), rows=rows,
+                       wall_s=time.perf_counter() - t0, workers=workers,
+                       spec=spec)
+
+
+# --------------------------------------------------------------------------
+# derived statistics
+# --------------------------------------------------------------------------
+
+
+def geomean(xs: Iterable[float]) -> float:
+    import math
+
+    xs = [max(x, 1e-12) for x in xs]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def scheme_ratio(
+    rows: Iterable[CellResult],
+    num: str = "page",
+    den: str = "daemon",
+    metric: str = "cycles",
+) -> Dict[tuple, float]:
+    """Pair cells that differ only in ``scheme`` and return num/den ratios
+    keyed by the remaining axis values (>1 means ``den`` wins on cycles)."""
+    by_key: Dict[tuple, Dict[str, CellResult]] = {}
+    for r in rows:
+        key = tuple((k, v) for k, v in sorted(r.axes.items()) if k != "scheme")
+        by_key.setdefault(key, {})[r.axes.get("scheme", "")] = r
+    out = {}
+    for key, pair in by_key.items():
+        if num in pair and den in pair:
+            a = getattr(pair[num].metrics, metric)
+            b = getattr(pair[den].metrics, metric)
+            out[key] = a / max(b, 1e-12)
+    return out
+
+
+def scheme_geomean(rows: Iterable[CellResult], num: str = "page",
+                   den: str = "daemon", metric: str = "cycles") -> float:
+    """Geomean of num/den over all paired cells — the paper's summary stat."""
+    ratios = scheme_ratio(rows, num, den, metric)
+    return geomean(ratios.values()) if ratios else float("nan")
+
+
+# --------------------------------------------------------------------------
+# BENCH_sim.json ledger
+# --------------------------------------------------------------------------
+
+
+def write_bench(path: str, result: SweepResult,
+                derived: Optional[Mapping[str, Any]] = None) -> dict:
+    """Merge ``result`` into the BENCH_sim.json ledger at ``path`` (created if
+    missing), keyed by sweep name so repeated runs overwrite their own entry.
+    ``derived`` attaches summary stats (e.g. daemon-vs-page geomeans).  The
+    read-modify-write holds an advisory lock so concurrently-running
+    benchmarks do not drop each other's entries."""
+    lock = open(path + ".lock", "w")
+    try:
+        try:
+            import fcntl
+
+            fcntl.flock(lock, fcntl.LOCK_EX)
+        except ImportError:  # non-POSIX: single-writer assumption
+            pass
+        doc: Dict[str, Any] = {"schema": BENCH_SCHEMA, "sweeps": {}}
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    prev = json.load(f)
+                if isinstance(prev, dict) and prev.get("schema") == BENCH_SCHEMA:
+                    doc = prev
+            except (json.JSONDecodeError, OSError):
+                pass  # corrupt/foreign ledger: rewrite from scratch
+        entry = result.as_dict()
+        if derived:
+            entry["derived"] = dict(derived)
+        doc.setdefault("sweeps", {})[result.name] = entry
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        return doc
+    finally:
+        lock.close()

@@ -1,5 +1,6 @@
 """Synthetic workload trace generators modeled on the paper's evaluation
-domains (graph processing, HPC, data analytics, bioinformatics, ML).
+domains (graph processing, HPC, data analytics, bioinformatics, ML) —
+DESIGN.md §2.4.
 
 A trace is three parallel numpy arrays:
     gaps:  int32 compute cycles between consecutive memory accesses

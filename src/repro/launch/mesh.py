@@ -26,8 +26,11 @@ def make_mesh(shape: Tuple[int, ...], axes: Optional[Tuple[str, ...]] = None):
     if axes is None:
         axes = ("pod", "data", "model")[-len(shape):]
     n = int(np.prod(shape))
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types, devices=jax.devices()[:n])
+    axis_type = getattr(jax.sharding, "AxisType", None)  # absent before jax 0.5
+    if axis_type is None:
+        return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+    return jax.make_mesh(shape, axes, (axis_type.Auto,) * len(axes),
+                         devices=jax.devices()[:n])
 
 
 def parse_mesh(spec: str):

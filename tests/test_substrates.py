@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytest.importorskip("zstandard", reason="zstandard not installed (see requirements.txt); repro.checkpoint needs it")
 from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, TokenPipeline
 from repro.optim import adamw, schedule

@@ -1,0 +1,155 @@
+"""Sweep-engine tests (DESIGN.md §6): process fan-out determinism, JSON
+persistence, the BENCH_sim.json ledger, and the scenario axes (bandwidth
+jitter, multi-MC interleaving) added for the paper's robustness grids."""
+import json
+
+import pytest
+
+from repro.core.sim import (
+    LinkSchedule,
+    SimConfig,
+    Sweep,
+    SweepResult,
+    cell_seed,
+    run_one,
+    run_sweep,
+    scheme_geomean,
+    write_bench,
+)
+from repro.core.sim.engine import Engine, FifoLink
+
+N = 4_000  # accesses per cell: fast but dynamics-exercising
+
+
+def small_sweep(**over):
+    kw = dict(
+        name="t",
+        axes={"workload": ("pr", "st"), "scheme": ("page", "daemon")},
+        n_accesses=N,
+    )
+    kw.update(over)
+    return Sweep(**kw)
+
+
+def test_parallel_equals_serial_cell_for_cell():
+    """Determinism under process fan-out: same cells, same order, identical
+    Metrics — the property that makes parallel figure runs trustworthy."""
+    sw = small_sweep()
+    serial = run_sweep(sw, workers=1)
+    par = run_sweep(sw, workers=2)
+    assert [r.axes for r in serial.rows] == [r.axes for r in par.rows]
+    assert [r.metrics.as_dict() for r in serial.rows] == \
+           [r.metrics.as_dict() for r in par.rows]
+    assert par.workers == 2 and len(par) == len(sw) == 4
+
+
+def test_json_roundtrip(tmp_path):
+    res = run_sweep(small_sweep())
+    p = str(tmp_path / "sweep.json")
+    res.save_json(p)
+    back = SweepResult.load_json(p)
+    assert back.name == res.name and back.axes == res.axes
+    assert [r.as_dict() for r in back.rows] == [r.as_dict() for r in res.rows]
+
+
+def test_bench_ledger_merges_by_name(tmp_path):
+    p = str(tmp_path / "BENCH_sim.json")
+    a = run_sweep(small_sweep(name="a"))
+    b = run_sweep(small_sweep(name="b", axes={"workload": ("pr",),
+                                              "scheme": ("page", "daemon")}))
+    write_bench(p, a, derived={"g": scheme_geomean(a.rows)})
+    doc = write_bench(p, b)
+    assert set(doc["sweeps"]) == {"a", "b"}
+    with open(p) as f:
+        on_disk = json.load(f)
+    assert set(on_disk["sweeps"]) == {"a", "b"}
+    assert on_disk["sweeps"]["a"]["derived"]["g"] > 1.0  # daemon beats page
+
+
+def test_config_axes_and_derived_seeds():
+    sw = Sweep(name="j", axes={"scheme": ("page",), "workload": ("pr",),
+                               "bw_jitter": (0.0, 0.5), "seed": (0, 1)},
+               n_accesses=1_000, derive_seeds=True)
+    res = run_sweep(sw)
+    assert len(res) == 4
+    # derived seeds are a pure function of the cell axes
+    for r in res.rows:
+        assert r.seed == cell_seed(r.axes, base_seed=r.axes["seed"])
+    assert len({r.seed for r in res.rows}) == 4
+
+
+def test_unknown_axis_rejected():
+    with pytest.raises(ValueError, match="unknown sweep axis"):
+        Sweep(name="x", axes={"not_a_field": (1,)})
+
+
+def test_jitter_regression_daemon_degrades_less_than_page():
+    """DESIGN.md §5: under bandwidth dips (fabric congestion) the page FIFO
+    serializes critical lines behind delayed pages, while DaeMon's reserved
+    line-queue share absorbs the dip — daemon must degrade less."""
+    base = SimConfig(link_bw_frac=0.25, jitter_period=10_000)
+    jit = base.with_(bw_jitter=0.5)
+    degs = {}
+    for s in ("page", "daemon"):
+        c0 = run_one("pr", s, base, n_accesses=N).cycles
+        cj = run_one("pr", s, jit, n_accesses=N).cycles
+        degs[s] = cj / c0
+    assert degs["page"] > 1.05, degs  # congestion actually hurts the baseline
+    assert degs["daemon"] < degs["page"] * 0.9, degs
+
+
+def test_jitter_deterministic_and_inert_at_zero():
+    a = run_one("pr", "daemon", SimConfig(bw_jitter=0.4, lat_jitter=0.2),
+                n_accesses=2_000)
+    b = run_one("pr", "daemon", SimConfig(bw_jitter=0.4, lat_jitter=0.2),
+                n_accesses=2_000)
+    assert a.cycles == b.cycles and a.net_bytes == b.net_bytes
+    plain = run_one("pr", "daemon", SimConfig(), n_accesses=2_000)
+    zeroed = run_one("pr", "daemon", SimConfig(bw_jitter=0.0, lat_jitter=0.0),
+                     n_accesses=2_000)
+    assert plain.cycles == zeroed.cycles  # zero jitter == legacy model
+
+
+def test_fifo_link_piecewise_schedule_integration():
+    """FifoLink completion under a varying schedule matches brute-force
+    numerical integration of bytes * dt across epochs."""
+    sched = LinkSchedule(period=100, bw_jitter=0.8, lat_jitter=0.0, seed=7)
+    link = FifoLink(Engine(), bw=4.0, sched=sched)
+    start, size = 37.0, 1500.0
+    done = link._finish(start, size)
+    # numeric check: integrate capacity from start to done
+    t, sent, dt = start, 0.0, 0.01
+    while t < done - 1e-9:
+        step = min(dt, done - t)
+        sent += 4.0 * sched.bw_mult(t) * step
+        t += step
+    assert sent == pytest.approx(size, rel=1e-3)
+
+
+def test_mc_interleave_modes():
+    cfgs = {m: SimConfig(n_mcs=4, mc_interleave=m)
+            for m in ("page", "hash", "single")}
+    cycles = {m: run_one("pr", "daemon", c, n_accesses=N).cycles
+              for m, c in cfgs.items()}
+    # all modes run and are deterministic; 'single' (one shared link) can
+    # never beat hashed spreading across 4 independent links
+    assert cycles["hash"] <= cycles["single"] * 1.01, cycles
+    with pytest.raises(ValueError, match="mc_interleave"):
+        run_one("pr", "daemon", SimConfig(mc_interleave="bogus"), n_accesses=100)
+
+
+def test_nmcs_sweep_runs_and_helps_page_scheme():
+    """More MCs = more aggregate links: the page scheme's congestion eases,
+    so daemon's advantage shrinks but must not invert (robustness)."""
+    sw = Sweep(
+        name="nmcs",
+        axes={"workload": ("pr",), "n_mcs": (1, 4), "scheme": ("page", "daemon")},
+        base=SimConfig(link_bw_frac=0.125, mc_interleave="hash"),
+        n_accesses=N,
+    )
+    res = run_sweep(sw)
+    g = res.grid("n_mcs", "scheme")
+    adv = {n: g[(n, "page")].metrics.cycles / g[(n, "daemon")].metrics.cycles
+           for n in (1, 4)}
+    assert adv[4] <= adv[1] * 1.1, adv
+    assert adv[4] >= 0.95, adv
