@@ -7,7 +7,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.block_quant import ops as bq
 from repro.kernels.flash_attention.ref import attention_ref

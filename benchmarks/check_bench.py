@@ -1,0 +1,124 @@
+"""Benchmark-regression gate for the BENCH_sim.json ledger (docs/SWEEPS.md).
+
+Compares the derived daemon-vs-page geomeans of a freshly produced ledger
+against the committed baseline, section by section, with a relative
+tolerance (default 5%).  The committed BENCH_sim.json is the output of the
+exact CI command::
+
+    PYTHONPATH=src python benchmarks/run.py --quick \
+        --only fig2,fig4_top,fig4_bottom,sweep_jitter,sweep_nmcs,fig5
+
+so CI can regenerate it deterministically and fail the workflow when a
+code change moves any geomean by more than the tolerance — in EITHER
+direction: a >5% improvement means the committed ledger is stale and must
+be regenerated alongside the change.
+
+Comparisons are refused (exit 1) when a section's sweep spec — axes,
+n_accesses, footprint, seeding, base SimConfig — differs between baseline
+and fresh: the numbers would not be commensurable.
+
+Usage (CI copies the committed ledger aside before re-running benchmarks)::
+
+    cp BENCH_sim.json /tmp/BENCH_baseline.json
+    PYTHONPATH=src python benchmarks/run.py --quick --only ...
+    PYTHONPATH=src python benchmarks/check_bench.py \
+        --baseline /tmp/BENCH_baseline.json --fresh BENCH_sim.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATED_PREFIX = "daemon_vs_page_geomean"
+
+
+def load_sweeps(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "sweeps" not in doc:
+        sys.exit(f"{path}: not a BENCH_sim.json ledger (no 'sweeps' key)")
+    return doc["sweeps"]
+
+
+def compare(baseline: dict, fresh: dict, tol: float,
+            sections: list[str] | None = None):
+    """Yield (section, key, base, new, rel, status) rows; status is one of
+    'ok', 'regression', 'spec-mismatch', 'missing-section', 'missing-key'."""
+    names = sections if sections else sorted(
+        n for n in baseline if any(
+            k.startswith(GATED_PREFIX) for k in baseline[n].get("derived", {})))
+    for name in names:
+        if name not in baseline:
+            yield (name, "", None, None, 0.0, "missing-section")
+            continue
+        if name not in fresh:
+            yield (name, "", None, None, 0.0, "missing-section")
+            continue
+        b, f = baseline[name], fresh[name]
+        for part in ("axes", "spec"):
+            if b.get(part) != f.get(part):
+                yield (name, part, None, None, 0.0, "spec-mismatch")
+                break
+        else:
+            bd = b.get("derived", {})
+            fd = f.get("derived", {})
+            for key in sorted(bd):
+                if not key.startswith(GATED_PREFIX):
+                    continue
+                if key not in fd:
+                    yield (name, key, bd[key], None, 0.0, "missing-key")
+                    continue
+                base, new = float(bd[key]), float(fd[key])
+                rel = (new - base) / abs(base) if base else float("inf")
+                yield (name, key, base, new,
+                       rel, "ok" if abs(rel) <= tol else "regression")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_sim.json (copied aside before re-running)")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly produced BENCH_sim.json")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="max relative drift per derived geomean (default 5%%)")
+    ap.add_argument("--sections", default="",
+                    help="comma-separated sweep names to gate "
+                         "(default: every baseline section with gated keys)")
+    args = ap.parse_args()
+    sections = [s.strip() for s in args.sections.split(",") if s.strip()] or None
+
+    baseline = load_sweeps(args.baseline)
+    fresh = load_sweeps(args.fresh)
+    failures = 0
+    checked = 0
+    for name, key, base, new, rel, status in compare(
+            baseline, fresh, args.tolerance, sections):
+        if status == "ok":
+            checked += 1
+            print(f"OK    {name}/{key}: {base:.4f} -> {new:.4f} ({rel:+.2%})")
+        elif status == "regression":
+            checked += 1
+            failures += 1
+            print(f"FAIL  {name}/{key}: {base:.4f} -> {new:.4f} "
+                  f"({rel:+.2%}, beyond {args.tolerance:.0%} tolerance)")
+        elif status == "spec-mismatch":
+            failures += 1
+            print(f"FAIL  {name}: sweep {key} differ between baseline and "
+                  f"fresh — results not comparable; regenerate the committed "
+                  f"ledger with the CI quick command")
+        else:
+            failures += 1
+            print(f"FAIL  {name}/{key or '<section>'}: {status}")
+    if checked == 0 and failures == 0:
+        sys.exit("no gated derived keys found — nothing was checked")
+    if failures:
+        sys.exit(f"{failures} benchmark-regression failure(s) "
+                 f"(tolerance {args.tolerance:.0%})")
+    print(f"benchmark gate passed: {checked} geomean(s) within "
+          f"{args.tolerance:.0%}")
+
+
+if __name__ == "__main__":
+    main()

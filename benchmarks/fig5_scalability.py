@@ -1,0 +1,72 @@
+"""Multi-CC scalability (DESIGN.md §2.5): N compute complexes, each running
+a full application, contending for the shared per-MC downlinks — DaeMon vs
+the page scheme as the system scales from 1 to 8 CCs.
+
+One declarative Sweep over workload-mix x n_ccs x scheme on the parallel
+sweep engine; the per-n_ccs daemon-vs-page geomeans merge into
+BENCH_sim.json (docs/SWEEPS.md) and are gated in CI by check_bench.py.
+The paper's scalability claim shows up as the geomean *increasing*
+monotonically with the CC count: every added CC's page bursts queue on the
+shared FIFO downlink, while DaeMon's reserved line share keeps critical
+lines bounded.
+
+Mix semantics: CC c runs parts[c % len(parts)], so a multi-part mix's
+workload *composition* varies with n_ccs (at n_ccs=1 only the first part
+runs).  Each page-vs-daemon ratio is composition-matched (both schemes see
+identical traces at a cell), and the pure 'pr' mix gives the
+composition-stable contention trend; the multi-part mixes add realism
+(heterogeneous neighbors), not a controlled composition axis.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core.sim import (
+    default_workers,
+    fig5_scalability_spec,
+    run_sweep,
+    scheme_geomean,
+    scheme_ratio,
+    write_bench,
+)
+
+from benchmarks import BENCH_PATH
+
+
+def run(n_accesses: int = 15_000, workers: int | None = None,
+        bench_path: str = BENCH_PATH):
+    workers = default_workers() if workers is None else workers
+    sw = fig5_scalability_spec(n_accesses=n_accesses)
+    res = run_sweep(sw, workers=workers)
+    per_call = res.us_per_call  # per-cell sim cost, worker-count independent
+    rows, derived = [], {}
+    for n_ccs in sw.axes["n_ccs"]:
+        sub = res.filter(n_ccs=n_ccs)
+        g = scheme_geomean(sub)
+        derived[f"daemon_vs_page_geomean@n_ccs={n_ccs}"] = g
+        rows.append((f"fig5/n_ccs{n_ccs}/geomean_daemon_vs_page", per_call,
+                     f"speedup={g:.3f}"))
+        for key, ratio in sorted(scheme_ratio(sub).items()):
+            mix = dict(key)["workload"]
+            rows.append((f"fig5/{mix}/n_ccs{n_ccs}", per_call,
+                         f"speedup={ratio:.3f}"))
+    write_bench(bench_path, res, derived=derived)
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--n-accesses", type=int, default=15_000)
+    args = ap.parse_args()
+    for tag, us, derived in run(args.n_accesses, args.workers):
+        print(f"{tag},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

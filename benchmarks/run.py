@@ -21,6 +21,7 @@ def main() -> None:
         fig2_schemes,
         fig4_multijob,
         fig4_robustness,
+        fig5_scalability,
         roofline,
     )
 
@@ -42,6 +43,7 @@ def main() -> None:
         ("fig4_bottom", lambda: fig4_multijob.run(n_accesses=n_fig4, workers=w)),
         ("sweep_jitter", lambda: fig4_robustness.run_jitter(n_accesses=n_fig4, workers=w)),
         ("sweep_nmcs", lambda: fig4_robustness.run_nmcs(n_accesses=n_fig4, workers=w)),
+        ("fig5", lambda: fig5_scalability.run(n_accesses=n_fig4, workers=w)),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]

@@ -28,11 +28,15 @@ import shutil
 import threading
 import time
 from pathlib import Path
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dep: fail at first (de)compress, not import
+    zstandard = None
 
 _FLAT_SEP = "/"
 
@@ -70,6 +74,8 @@ class CheckpointManager:
 
     # ---------------- save ----------------
     def _write(self, step: int, flat: Dict[str, np.ndarray], extra: Dict) -> Path:
+        if zstandard is None:  # before any filesystem mutation
+            raise ImportError("checkpoint save requires the 'zstandard' package")
         final = self.dir / f"step_{step:08d}"
         tmp = self.dir / f"step_{step:08d}.tmp"
         if tmp.exists():
@@ -155,6 +161,8 @@ class CheckpointManager:
             h = hashlib.sha256(payload).hexdigest()
             if h != manifest["hash"]:
                 raise IOError(f"checkpoint {d} corrupt: hash mismatch")
+        if zstandard is None:
+            raise ImportError("checkpoint load requires the 'zstandard' package")
         dctx = zstandard.ZstdDecompressor()
         with np.load(io.BytesIO(dctx.decompress(payload))) as z:
             flat = {k: z[k] for k in z.files}

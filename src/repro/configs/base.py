@@ -8,9 +8,8 @@ dry-run (ShapeDtypeStruct, no allocation).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, replace
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclass(frozen=True)

@@ -23,7 +23,6 @@ on 8 fake devices in tests/test_movement.py.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

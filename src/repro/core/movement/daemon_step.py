@@ -27,7 +27,6 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.movement.engine import DAEMON_DEFAULT, MovementConfig
 from repro.kernels.block_quant import ops as bq
-from repro.models import model as M
 from repro.optim import adamw
 
 

@@ -13,8 +13,8 @@ explicitly damped.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Tuple
 
 
 @dataclass(frozen=True)

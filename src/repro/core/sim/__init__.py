@@ -8,6 +8,8 @@ from repro.core.sim.runner import (
     fig4_bottom_spec,
     fig4_top,
     fig4_top_spec,
+    fig5_scalability,
+    fig5_scalability_spec,
     geomean,
     paper_claims,
     run_one,
@@ -29,7 +31,8 @@ from repro.core.sim.trace import WORKLOADS, generate
 __all__ = [
     "SCHEMES", "Metrics", "SimConfig", "Simulator", "simulate", "LinkSchedule",
     "fig2", "fig2_spec", "fig2_sweep", "fig4_bottom", "fig4_bottom_spec",
-    "fig4_top", "fig4_top_spec", "geomean", "paper_claims",
+    "fig4_top", "fig4_top_spec", "fig5_scalability", "fig5_scalability_spec",
+    "geomean", "paper_claims",
     "run_one", "slowdowns", "WORKLOADS", "generate",
     "CellResult", "Sweep", "SweepResult", "cell_seed", "default_workers",
     "run_sweep", "scheme_geomean", "scheme_ratio", "write_bench",

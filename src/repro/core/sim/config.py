@@ -7,7 +7,6 @@ page movements may be link-compressed.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Tuple
 
 SCHEMES = ("local", "page", "page_free", "cacheline", "both", "daemon")
 
@@ -19,7 +18,11 @@ class SimConfig:
     page_bytes: int = 4096
     header_bytes: int = 16  # per network packet
 
-    # CC
+    # CCs (§2.5 of DESIGN.md): n_ccs independent compute complexes, each with
+    # its own cores/LLC/local page cache (and, for daemon, its own engines),
+    # all contending for the SAME per-MC downlinks.  n_ccs=1 is the legacy
+    # single-CC model, bit-for-bit.
+    n_ccs: int = 1
     llc_bytes: int = 1 << 21  # 2 MiB LLC
     llc_assoc: int = 16
     llc_lat: int = 30
@@ -84,6 +87,10 @@ class Metrics:
     lines_moved: int = 0
     bytes_saved_compression: float = 0.0
     stall_cycles: float = 0.0
+    # multi-CC rollup (§2.5): one entry per CC (cc index, per-CC workload,
+    # and the full per-CC counter set); empty for single-CC runs, where the
+    # aggregate IS the (only) CC's metrics.
+    per_cc: list = field(default_factory=list)
 
     @property
     def avg_access_cost(self) -> float:
@@ -111,6 +118,7 @@ class Metrics:
             "miss_latency_sum": self.miss_latency_sum,
             "stall_cycles": self.stall_cycles,
             "bytes_saved_compression": self.bytes_saved_compression,
+            "per_cc": self.per_cc,
         }
 
     @classmethod

@@ -16,11 +16,15 @@ pathology).  DaeMon's link is a fluid dual-queue: when both queues are busy
 the sub-block queue drains at a fixed ``line_share`` of the bandwidth, i.e.
 the paper's queue controller serving lines at a higher predefined fixed rate.
 
-Scenario axes (DESIGN.md §5): every link optionally carries a
-:class:`LinkSchedule` — a piecewise-constant per-epoch bandwidth/latency
-multiplier modeling the runtime network variability the paper stresses — and
-pages/lines are interleaved across ``n_mcs`` independent MC links per
-``SimConfig.mc_interleave`` (DESIGN.md §2.3).
+Scenario axes: every link optionally carries a :class:`LinkSchedule` — a
+piecewise-constant per-epoch bandwidth/latency multiplier modeling runtime
+network variability (DESIGN.md §5) — pages/lines are interleaved across
+``n_mcs`` independent MC links per ``SimConfig.mc_interleave`` (DESIGN.md
+§2.3), and ``n_ccs`` compute complexes, each with its own cores/LLC/local
+page cache and (for daemon) its own engines, contend for the SAME per-MC
+downlinks through per-CC flow arbitration (DESIGN.md §2.5).  ``n_ccs=1``
+keeps the legacy single-CC links and reproduces the legacy model
+bit-for-bit.
 """
 from __future__ import annotations
 
@@ -28,7 +32,7 @@ import heapq
 import itertools
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -149,7 +153,10 @@ class LinkSchedule:
 
 
 class FifoLink:
-    """Store-and-forward FIFO: one queue, transfers fully serialize."""
+    """Store-and-forward FIFO: one queue, transfers fully serialize.
+
+    Single-CC only (``flow`` is accepted for call-site uniformity and
+    ignored); multi-CC systems use :class:`SharedFifoLink`."""
 
     def __init__(self, eng: Engine, bw: float, sched: Optional[LinkSchedule] = None):
         self.eng = eng
@@ -174,7 +181,8 @@ class FifoLink:
             rem -= cap
             t = nb
 
-    def send(self, t: float, size: float, cb: Callable[[float], None], cls: str = "line"):
+    def send(self, t: float, size: float, cb: Callable[[float], None],
+             cls: str = "line", flow: int = 0):
         start = max(t, self.busy_until)
         done = self._finish(start, size)
         self.busy_until = done
@@ -186,7 +194,10 @@ class DualQueueLink:
     """DaeMon's decoupled queues: fluid bandwidth partition between the
     sub-block (line) queue and the page queue.  Within a queue transfers
     serialize FIFO; across queues the line queue gets ``line_share`` of the
-    bandwidth whenever it is non-empty (and all of it when pages are idle)."""
+    bandwidth whenever it is non-empty (and all of it when pages are idle).
+
+    Single-CC only (``flow`` ignored); multi-CC systems use
+    :class:`SharedDualQueueLink`."""
 
     def __init__(self, eng: Engine, bw: float, line_share: float,
                  sched: Optional[LinkSchedule] = None):
@@ -287,7 +298,8 @@ class DualQueueLink:
                 self._pop_next(c)
                 cb(t)
 
-    def send(self, t: float, size: float, cb: Callable[[float], None], cls: str = "line"):
+    def send(self, t: float, size: float, cb: Callable[[float], None],
+             cls: str = "line", flow: int = 0):
         self._advance(t)
         self._flush(t)
         self.bytes += size
@@ -297,6 +309,191 @@ class DualQueueLink:
             self.head_rem[cls] = size
             self.cb[cls] = cb
         self._schedule(t)
+
+
+class SharedLink:
+    """Multi-flow generalization of :class:`DualQueueLink`'s fluid machinery
+    (DESIGN.md §2.5): one FIFO *lane* per channel (a channel is a CC flow,
+    or a (flow, class) pair), and an arbitration policy — ``_split`` — that
+    divides the instantaneous link bandwidth across the backlogged lanes.
+    Within a lane transfers serialize FIFO; across lanes the fluid shares
+    are re-derived whenever a head completes, a send arrives, or a
+    bandwidth-schedule epoch boundary passes.
+
+    Only instantiated for ``n_ccs > 1`` systems: single-CC runs keep the
+    legacy FifoLink/DualQueueLink code paths byte-for-byte.
+    """
+
+    def __init__(self, eng: Engine, bw: float, channels: Sequence[Hashable],
+                 sched: Optional[LinkSchedule] = None):
+        self.eng = eng
+        self.bw = bw
+        self.sched = sched
+        self.channels: Tuple[Hashable, ...] = tuple(channels)
+        self.q: Dict[Hashable, deque] = {c: deque() for c in self.channels}
+        self.head_rem: Dict[Hashable, float] = dict.fromkeys(self.channels, 0.0)
+        self.cb: Dict[Hashable, Optional[Callable]] = dict.fromkeys(self.channels)
+        self.last = 0.0
+        self.epoch = 0
+        self.bytes = 0.0
+
+    # -- arbitration policy (subclasses) --
+    def _chan(self, flow: int, cls: str) -> Hashable:
+        raise NotImplementedError
+
+    def _split(self, active: List[Hashable], bw: float) -> Dict[Hashable, float]:
+        """Divide ``bw`` across the backlogged channels ``active``."""
+        raise NotImplementedError
+
+    # -- fluid machinery (generalized from DualQueueLink) --
+    def _bw_at(self, t: float) -> float:
+        s = self.sched
+        return self.bw * s.bw_mult(t) if s is not None and s.bw_active else self.bw
+
+    def _rates(self, t: float) -> Dict[Hashable, float]:
+        active = [c for c in self.channels if self.head_rem[c] > 0]
+        rates = dict.fromkeys(self.channels, 0.0)
+        if active:
+            rates.update(self._split(active, self._bw_at(t)))
+        return rates
+
+    def _advance(self, t: float):
+        sched = self.sched
+        varying = sched is not None and sched.bw_active
+        if all(self.head_rem[c] <= 0 for c in self.channels):
+            self.last = max(self.last, t)  # idle link: skip epoch walking
+            return
+        while self.last < t:
+            seg_end = min(t, sched.next_boundary(self.last)) if varying else t
+            dt = seg_end - self.last
+            if dt > 0:
+                rates = self._rates(self.last)
+                for c in self.channels:
+                    if self.head_rem[c] > 0:
+                        self.head_rem[c] = max(0.0, self.head_rem[c] - rates[c] * dt)
+            self.last = seg_end
+
+    def _schedule(self, t: float):
+        self.epoch += 1
+        epoch = self.epoch
+        rates = self._rates(t)
+        best = None
+        for c in self.channels:
+            if self.head_rem[c] > 0 and rates[c] > 0:
+                eta = t + self.head_rem[c] / rates[c]
+                if best is None or eta < best[0]:
+                    best = (eta, c)
+        if best is None:
+            return
+        eta, c = best
+        if self.sched is not None and self.sched.bw_active:
+            nb = self.sched.next_boundary(t)
+            if eta > nb:
+                eta = nb  # re-derive rates at the epoch boundary
+
+        def fire(tt: float, _c=c, _epoch=epoch):
+            if _epoch != self.epoch:
+                return  # stale
+            self._advance(tt)
+            if self.head_rem[_c] > 1e-3:  # epsilon in bytes, as DualQueueLink
+                self._schedule(tt)
+                return
+            # several lanes can drain at the same instant under fair shares:
+            # complete every finished head, not just the scheduled one
+            done = []
+            for ch in self.channels:
+                if self.cb[ch] is not None and self.head_rem[ch] <= 1e-3:
+                    done.append(self.cb[ch])
+                    self._pop_next(ch)
+            self._schedule(tt)
+            for fn in done:
+                fn(tt)
+
+        self.eng.at(eta, fire)
+
+    def _pop_next(self, c: Hashable):
+        if self.q[c]:
+            size, cb = self.q[c].popleft()
+            self.head_rem[c] = size
+            self.cb[c] = cb
+        else:
+            self.head_rem[c] = 0.0
+            self.cb[c] = None
+
+    def _flush(self, t: float):
+        for c in self.channels:
+            while self.cb[c] is not None and self.head_rem[c] <= 1e-3:
+                cb = self.cb[c]
+                self._pop_next(c)
+                cb(t)
+
+    def send(self, t: float, size: float, cb: Callable[[float], None],
+             cls: str = "line", flow: int = 0):
+        self._advance(t)
+        self._flush(t)
+        self.bytes += size
+        c = self._chan(flow, cls)
+        if self.cb[c] is not None:
+            self.q[c].append((size, cb))
+        else:
+            self.head_rem[c] = size
+            self.cb[c] = cb
+        self._schedule(t)
+
+
+class SharedFifoLink(SharedLink):
+    """Baseline MC downlink shared by ``n_flows`` CCs: one store-and-forward
+    FIFO lane per CC, fluid fair share across backlogged lanes (k active
+    flows each drain at bw/k — the fluid limit of round-robin packet
+    arbitration).  Lines still serialize behind pages *within* a CC's lane
+    (the paper's single-flow pathology), and a page burst from one CC
+    additionally cuts every other CC's drain rate — the multi-CC contention
+    the paper's scalability goal targets."""
+
+    def __init__(self, eng: Engine, bw: float, n_flows: int,
+                 sched: Optional[LinkSchedule] = None):
+        super().__init__(eng, bw, tuple(range(n_flows)), sched)
+
+    def _chan(self, flow: int, cls: str) -> Hashable:
+        return flow
+
+    def _split(self, active: List[Hashable], bw: float) -> Dict[Hashable, float]:
+        r = bw / len(active)
+        return {c: r for c in active}
+
+
+class SharedDualQueueLink(SharedLink):
+    """DaeMon MC downlink shared by ``n_flows`` CCs: the line *class* keeps
+    its fixed ``line_share`` of the bandwidth whenever any CC has a line in
+    flight (the paper's fixed-rate queue controller, applied system-wide),
+    and within each class the backlogged CC flows share the class bandwidth
+    equally.  One CC's page burst therefore cannot delay another CC's
+    critical lines beyond the fair division of the reserved line share."""
+
+    def __init__(self, eng: Engine, bw: float, line_share: float, n_flows: int,
+                 sched: Optional[LinkSchedule] = None):
+        self.line_share = line_share
+        channels = [(f, c) for f in range(n_flows) for c in ("line", "page")]
+        super().__init__(eng, bw, channels, sched)
+
+    def _chan(self, flow: int, cls: str) -> Hashable:
+        return (flow, cls)
+
+    def _split(self, active: List[Hashable], bw: float) -> Dict[Hashable, float]:
+        lines = [c for c in active if c[1] == "line"]
+        pages = [c for c in active if c[1] == "page"]
+        if lines and pages:
+            lb, pb = self.line_share * bw, (1.0 - self.line_share) * bw
+        elif lines:
+            lb, pb = bw, 0.0
+        else:
+            lb, pb = 0.0, bw
+        rates: Dict[Hashable, float] = {}
+        for c in lines:
+            rates[c] = lb / len(lines)
+        for c in pages:
+            rates[c] = pb / len(pages)
+        return rates
 
 
 # --------------------------------------------------------------------------
@@ -326,6 +523,26 @@ class Core:
     outstanding: deque = field(default_factory=deque)
     stalled: bool = False
     t_end: float = -1.0
+    cc: int = 0  # owning compute complex (index into Simulator.ccs)
+
+
+@dataclass
+class CCState:
+    """One compute complex (DESIGN.md §2.5): its cores, its local page
+    cache of remote memory, its own pending/inflight tracking (DaeMon's
+    per-unit engines live per CC), and its own Metrics rollup.  Address
+    spaces are per-CC (independent applications); CCs couple only through
+    the shared per-MC downlinks."""
+
+    idx: int
+    workload: str
+    cores: List[Core]
+    local: LRU
+    m: Metrics
+    comp_base: float
+    pending_lines: Dict[int, List[Request]] = field(default_factory=dict)
+    pending_pages: Dict[int, List[Request]] = field(default_factory=dict)
+    retry: deque = field(default_factory=deque)
 
 
 class Simulator:
@@ -333,7 +550,7 @@ class Simulator:
         self,
         cfg: SimConfig,
         scheme: str,
-        traces: List[Trace],
+        traces,
         workload: str = "",
         seed: int = 0,
     ):
@@ -344,16 +561,45 @@ class Simulator:
         self.rng = np.random.default_rng(seed + 17)
         self.m = Metrics(scheme=scheme, workload=workload)
 
-        footprint = int(max(int(tr[1].max()) + 64 for tr in traces))
+        # traces: List[Trace] (legacy, one CC) or List[List[Trace]] (one
+        # group per CC).  A Trace is a tuple of ndarrays, so the first
+        # element's first element disambiguates the two shapes.
+        if traces and isinstance(traces[0][0], np.ndarray):
+            cc_traces: List[List[Trace]] = [list(traces)]
+        else:
+            cc_traces = [list(g) for g in traces]
+        if len(cc_traces) != max(1, cfg.n_ccs):
+            raise ValueError(
+                f"n_ccs={cfg.n_ccs} but {len(cc_traces)} trace group(s) given")
+
+        # per-CC workload assignment: 'pr' (all CCs) or a '+'-separated mix
+        # ('pr+st') assigned round-robin across CCs
+        parts = tuple(workload.split("+")) if workload else ("",)
+
         llc_lines = cfg.llc_bytes // cfg.line_bytes
-        self.cores = [
-            Core(i, tr[0], tr[1] >> 6, tr[2], LRU(llc_lines // max(1, len(traces))))
-            for i, tr in enumerate(traces)
-        ]
-        # local memory: page-granularity cache of remote memory
-        n_pages_total = footprint // cfg.page_bytes + 1
-        self.local = LRU(max(1, int(n_pages_total * cfg.local_mem_frac)))
         self.lines_per_page = cfg.page_bytes // cfg.line_bytes
+        self.ccs: List[CCState] = []
+        cid = itertools.count()
+        for i, group in enumerate(cc_traces):
+            w = parts[i % len(parts)]
+            footprint = int(max(int(tr[1].max()) + 64 for tr in group))
+            cores = [
+                Core(next(cid), tr[0], tr[1] >> 6, tr[2],
+                     LRU(llc_lines // max(1, len(group))), cc=i)
+                for tr in group
+            ]
+            # local memory: page-granularity cache of remote memory
+            n_pages_total = footprint // cfg.page_bytes + 1
+            local = LRU(max(1, int(n_pages_total * cfg.local_mem_frac)))
+            # the single-CC aggregate IS the CC's metrics (legacy identity);
+            # multi-CC keeps per-CC metrics and rolls them up in run()
+            m = self.m if len(cc_traces) == 1 else Metrics(scheme=scheme, workload=w)
+            self.ccs.append(CCState(
+                idx=i, workload=w, cores=cores, local=local, m=m,
+                comp_base=COMPRESSIBILITY.get(w if len(parts) > 1 else workload, 2.0),
+            ))
+        self.cores = [c for cc in self.ccs for c in cc.cores]
+        n_ccs = len(self.ccs)
 
         if cfg.mc_interleave not in ("page", "hash", "single"):
             raise ValueError(f"mc_interleave={cfg.mc_interleave!r}")
@@ -364,22 +610,23 @@ class Simulator:
                          seed=cfg.jitter_seed * 1000 + i)
             for i in range(cfg.n_mcs)
         ]
-        # per-MC links (downlink data path; request path folded into net_lat)
-        mk = (
-            (lambda s: DualQueueLink(self.eng, cfg.link_bw, cfg.line_share, s))
-            if scheme == "daemon"
-            else (lambda s: FifoLink(self.eng, cfg.link_bw, s))
-        )
+        # per-MC links (downlink data path; request path folded into net_lat).
+        # Single-CC systems keep the legacy link classes (bit-identical);
+        # multi-CC systems share each MC downlink across per-CC flows.
+        if scheme == "daemon":
+            mk = (
+                (lambda s: DualQueueLink(self.eng, cfg.link_bw, cfg.line_share, s))
+                if n_ccs == 1
+                else (lambda s: SharedDualQueueLink(
+                    self.eng, cfg.link_bw, cfg.line_share, n_ccs, s))
+            )
+        else:
+            mk = (
+                (lambda s: FifoLink(self.eng, cfg.link_bw, s))
+                if n_ccs == 1
+                else (lambda s: SharedFifoLink(self.eng, cfg.link_bw, n_ccs, s))
+            )
         self.links = [mk(s) for s in self.scheds]
-
-        # pending remote fetches (coalescing)
-        self.pending_lines: Dict[int, List[Request]] = {}
-        self.pending_pages: Dict[int, List[Request]] = {}
-        # daemon inflight buffers
-        self.retry: deque = deque()
-
-        base = COMPRESSIBILITY.get(workload, 2.0)
-        self.comp_ratio = lambda: max(1.0, self.rng.normal(base, 0.15 * base))
 
     # ---------------- address helpers ----------------
     def page_of(self, line: int) -> int:
@@ -388,7 +635,9 @@ class Simulator:
     def mc_of(self, page: int) -> int:
         """Page -> MC link placement (DESIGN.md §2.3).  A page lives at one
         MC, so its page movement AND the line fetches into it share a link;
-        distinct pages spread across independent links per the policy."""
+        distinct pages spread across independent links per the policy.
+        Placement is per-CC-address-space: two CCs' page p land on the same
+        MC — they contend for its downlink, not for the page itself."""
         n = self.cfg.n_mcs
         if n <= 1:
             return 0
@@ -403,6 +652,10 @@ class Simulator:
         """One-way network latency on MC link ``mc`` at time ``t``."""
         return self.cfg.net_lat * self.scheds[mc].lat_mult(t)
 
+    def comp_ratio(self, cc: CCState) -> float:
+        base = cc.comp_base
+        return max(1.0, self.rng.normal(base, 0.15 * base))
+
     # ---------------- core execution ----------------
     def start(self):
         for c in self.cores:
@@ -410,6 +663,7 @@ class Simulator:
 
     def core_step(self, core: Core, t: float):
         cfg = self.cfg
+        cc = self.ccs[core.cc]
         core.stalled = False
         t = max(t, core.t)
         n = len(core.addrs)
@@ -420,19 +674,19 @@ class Simulator:
             if len(core.outstanding) >= cfg.mlp:
                 core.stalled = True
                 core.t = t
-                self.m.stall_cycles += 1  # counted per stall episode
+                cc.m.stall_cycles += 1  # counted per stall episode
                 return  # resumed by completion of the oldest request
             line = int(core.addrs[core.idx])
             wr = bool(core.writes[core.idx])
             t += int(core.gaps[core.idx] * cfg.gap_scale)
             core.idx += 1
-            self.m.accesses += 1
+            cc.m.accesses += 1
             if core.llc.access(line, wr):
-                self.m.llc_hits += 1
+                cc.m.llc_hits += 1
                 t += cfg.llc_lat
                 continue
             t += cfg.llc_lat  # miss detection
-            lat = self.miss(core, line, wr, t)
+            lat = self.miss(cc, core, line, wr, t)
             if lat is not None:  # served synchronously (local memory / 'local')
                 t += lat
         core.t = t
@@ -441,7 +695,7 @@ class Simulator:
     def _complete(self, req: Request, t: float):
         req.done = True
         req.t_done = t
-        self.m.miss_latency_sum += t - req.t_issue
+        self.ccs[req.core.cc].m.miss_latency_sum += t - req.t_issue
         core = req.core
         if core.stalled and core.outstanding and core.outstanding[0].done:
             self.eng.at(t, lambda tt, c=core: self.core_step(c, tt))
@@ -449,67 +703,66 @@ class Simulator:
     def _fill_line(self, core: Core, line: int, dirty: bool):
         core.llc.insert(line, dirty)
 
-    def _insert_page(self, page: int, t: float):
-        ev = self.local.insert(page)
+    def _insert_page(self, cc: CCState, page: int, t: float):
+        ev = cc.local.insert(page)
         if ev is not None and ev[1]:  # dirty eviction -> writeback
-            self._send_page(ev[0], t, writeback=True)
+            self._send_page(cc, ev[0], t, writeback=True)
 
     # ---------------- miss handling per scheme ----------------
-    def _local_hit(self, core: Core, line: int, wr: bool, t: float) -> None:
+    def _local_hit(self, cc: CCState, core: Core, line: int, wr: bool, t: float) -> None:
         """DRAM access in local memory: async within the MLP window."""
-        self.m.local_hits += 1
+        cc.m.local_hits += 1
         self._fill_line(core, line, wr)
         req = self._mk_req(core, line, wr, t)
         self.eng.at(t + self.cfg.mem_lat, lambda tt: self._complete(req, tt))
 
-    def miss(self, core: Core, line: int, wr: bool, t: float) -> Optional[float]:
-        cfg = self.cfg
+    def miss(self, cc: CCState, core: Core, line: int, wr: bool, t: float) -> Optional[float]:
         scheme = self.scheme
         page = self.page_of(line)
 
         if scheme == "local":
-            self._local_hit(core, line, wr, t)
+            self._local_hit(cc, core, line, wr, t)
             return None
 
         if scheme == "cacheline":
-            self.m.remote_misses += 1
+            cc.m.remote_misses += 1
             req = self._mk_req(core, line, wr, t)
-            self._fetch_line(line, t, req)
+            self._fetch_line(cc, line, t, req)
             return None
 
         # page-based schemes check local memory first
-        if self.local.access(page, wr):
-            self._local_hit(core, line, wr, t)
+        if cc.local.access(page, wr):
+            self._local_hit(cc, core, line, wr, t)
             return None
 
-        self.m.remote_misses += 1
+        cc.m.remote_misses += 1
 
         if scheme == "page_free":
-            self._insert_page(page, t)
-            self.m.pages_moved += 1
-            self.m.local_hits -= 1  # counted as remote, not a local hit
-            self._local_hit(core, line, wr, t)
+            self._insert_page(cc, page, t)
+            cc.m.pages_moved += 1
+            cc.m.local_hits -= 1  # counted as remote, not a local hit
+            self._local_hit(cc, core, line, wr, t)
             return None
 
         if scheme == "page":
             req = self._mk_req(core, line, wr, t)
-            if page in self.pending_pages:
-                self.pending_pages[page].append(req)
+            if page in cc.pending_pages:
+                cc.pending_pages[page].append(req)
             else:
-                self.pending_pages[page] = [req]
-                self._send_page(page, t)
+                cc.pending_pages[page] = [req]
+                self._send_page(cc, page, t)
             return None
 
         if scheme == "both":
             req = self._mk_req(core, line, wr, t)
-            self._fetch_line(line, t, req)
-            if page not in self.pending_pages:
-                self.pending_pages[page] = []
-                self._send_page(page, t)
+            self._fetch_line(cc, line, t, req)
+            if page not in cc.pending_pages:
+                cc.pending_pages[page] = []
+                self._send_page(cc, page, t)
             return None
 
         if scheme == "daemon":
-            return self._daemon_miss(core, line, wr, t)
+            return self._daemon_miss(cc, core, line, wr, t)
 
         raise ValueError(scheme)
 
@@ -520,16 +773,17 @@ class Simulator:
         return req
 
     # ---------------- transfers ----------------
-    def _fetch_line(self, line: int, t: float, req: Optional[Request] = None):
+    def _fetch_line(self, cc: CCState, line: int, t: float,
+                    req: Optional[Request] = None):
         """Line fetch: request flight + MC read + downlink queue + flight."""
         cfg = self.cfg
-        lst = self.pending_lines.get(line)
+        lst = cc.pending_lines.get(line)
         if lst is not None:  # coalesce with the inflight fetch
             if req is not None:
                 lst.append(req)
             return
-        self.pending_lines[line] = [req] if req is not None else []
-        self.m.lines_moved += 1
+        cc.pending_lines[line] = [req] if req is not None else []
+        cc.m.lines_moved += 1
         page = self.page_of(line)
         mc = self.mc_of(page)
         link = self.links[mc]
@@ -538,12 +792,13 @@ class Simulator:
 
         def on_tx_done(tt: float):
             arrive = tt + self.net_lat(mc, tt)
-            self.eng.at(arrive, lambda a: self._on_line_arrival(line, a))
+            self.eng.at(arrive, lambda a: self._on_line_arrival(cc, line, a))
 
-        self.eng.at(depart_mc, lambda tt: link.send(tt, size, on_tx_done, "line"))
-        self.m.net_bytes += size
+        self.eng.at(depart_mc,
+                    lambda tt: link.send(tt, size, on_tx_done, "line", cc.idx))
+        cc.m.net_bytes += size
 
-    def _send_page(self, page: int, t: float, writeback: bool = False):
+    def _send_page(self, cc: CCState, page: int, t: float, writeback: bool = False):
         cfg = self.cfg
         mc = self.mc_of(page)
         link = self.links[mc]
@@ -554,53 +809,56 @@ class Simulator:
         # buffer signals congestion (bandwidth-bound regime).  The compressor
         # is streaming, so only the pipeline fill (~1/4 of the full pass)
         # sits on the critical path; the rest overlaps transmission.
-        _, pu = self._buf_utils()
+        _, pu = self._buf_utils(cc)
         if self.scheme == "daemon" and cfg.compress and pu > self.PAGE_FAST:
-            ratio = self.comp_ratio()
+            ratio = self.comp_ratio(cc)
             size = cfg.page_bytes / ratio + cfg.header_bytes
             extra = cfg.comp_lat / 4
-            self.m.bytes_saved_compression += raw - size
-        self.m.net_bytes += size
+            cc.m.bytes_saved_compression += raw - size
+        cc.m.net_bytes += size
         if writeback:
             depart = t + extra  # compressed at the CC, then uplink (modeled on link)
-            self.eng.at(depart, lambda tt: link.send(tt, size, lambda a: None, "page"))
+            self.eng.at(depart,
+                        lambda tt: link.send(tt, size, lambda a: None, "page", cc.idx))
             return
-        self.m.pages_moved += 1
+        cc.m.pages_moved += 1
         depart_mc = t + self.net_lat(mc, t) + cfg.remote_mem_lat + extra
 
         def on_tx_done(tt: float):
             arrive = tt + self.net_lat(mc, tt) + (cfg.decomp_lat / 4 if extra else 0.0)
-            self.eng.at(arrive, lambda a: self._on_page_arrival(page, a))
+            self.eng.at(arrive, lambda a: self._on_page_arrival(cc, page, a))
 
-        self.eng.at(depart_mc, lambda tt: link.send(tt, size, on_tx_done, "page"))
+        self.eng.at(depart_mc,
+                    lambda tt: link.send(tt, size, on_tx_done, "page", cc.idx))
 
     # ---------------- arrivals ----------------
-    def _on_line_arrival(self, line: int, t: float):
-        reqs = self.pending_lines.pop(line, [])
+    def _on_line_arrival(self, cc: CCState, line: int, t: float):
+        reqs = cc.pending_lines.pop(line, [])
         for r in reqs:
             if not r.done:
                 self._fill_line(r.core, line, r.write)
                 self._complete(r, t)
-        self._drain_retry(t)
+        self._drain_retry(cc, t)
 
-    def _on_page_arrival(self, page: int, t: float):
-        self._insert_page(page, t)
-        reqs = self.pending_pages.pop(page, [])
+    def _on_page_arrival(self, cc: CCState, page: int, t: float):
+        self._insert_page(cc, page, t)
+        reqs = cc.pending_pages.pop(page, [])
         for r in reqs:
             if not r.done:
                 self._fill_line(r.core, r.addr, r.write)
                 self._complete(r, t + self.cfg.mem_lat)  # read from local memory
-        self._drain_retry(t)
+        self._drain_retry(cc, t)
 
     # ---------------- DaeMon ----------------
-    def _buf_utils(self) -> Tuple[float, float]:
-        lu = len(self.pending_lines) / self.cfg.inflight_lines
-        pu = len(self.pending_pages) / self.cfg.inflight_pages
+    def _buf_utils(self, cc: CCState) -> Tuple[float, float]:
+        lu = len(cc.pending_lines) / self.cfg.inflight_lines
+        pu = len(cc.pending_pages) / self.cfg.inflight_pages
         return lu, pu
 
     PAGE_FAST = 0.3  # inflight-page utilization below which pages drain fast
 
-    def _daemon_miss(self, core: Core, line: int, wr: bool, t: float) -> Optional[float]:
+    def _daemon_miss(self, cc: CCState, core: Core, line: int, wr: bool,
+                     t: float) -> Optional[float]:
         """Selection unit (paper §3-II): choose line / page / both from the
         inflight buffer utilizations.  When the page buffer drains fast
         (compressed pages, page-friendly phase) skip redundant line races;
@@ -608,86 +866,113 @@ class Simulator:
         cfg = self.cfg
         page = self.page_of(line)
         req = self._mk_req(core, line, wr, t)
-        lu, pu = self._buf_utils()
+        lu, pu = self._buf_utils(cc)
         pages_fast = pu <= self.PAGE_FAST
 
         # coalesce with an inflight page migration; race a line only when the
         # page queue is congested (the line is the critical-path fast path)
-        if page in self.pending_pages:
-            self.pending_pages[page].append(req)
-            if line in self.pending_lines:
-                self.pending_lines[line].append(req)
+        if page in cc.pending_pages:
+            cc.pending_pages[page].append(req)
+            if line in cc.pending_lines:
+                cc.pending_lines[line].append(req)
             elif not pages_fast and lu < 1.0:
-                self.pending_lines[line] = [req]
-                self._fetch_line_daemon(line, t, req)
+                cc.pending_lines[line] = [req]
+                self._fetch_line_daemon(cc, line, t, req)
             return None
 
         # triggering miss: BOTH by default — the line hides page queueing and
         # (de)compression latency, costing only ~80B next to a ~2KB page
         issue_page = pu < cfg.page_throttle_hi
-        issue_line = lu < 1.0 or line in self.pending_lines
+        issue_line = lu < 1.0 or line in cc.pending_lines
         if not issue_line and not issue_page:
-            self.retry.append(req)  # buffers full: re-issue when one drains
+            cc.retry.append(req)  # buffers full: re-issue when one drains
             return None
 
         if issue_line:
-            if line in self.pending_lines:
-                self.pending_lines[line].append(req)
+            if line in cc.pending_lines:
+                cc.pending_lines[line].append(req)
             else:
-                self.pending_lines[line] = [req]
-                self._fetch_line_daemon(line, t, req)
+                cc.pending_lines[line] = [req]
+                self._fetch_line_daemon(cc, line, t, req)
         if issue_page:
-            self.pending_pages.setdefault(page, []).append(req)
-            self._send_page(page, t)
+            cc.pending_pages.setdefault(page, []).append(req)
+            self._send_page(cc, page, t)
         return None
 
-    def _fetch_line_daemon(self, line: int, t: float, req: Request):
+    def _fetch_line_daemon(self, cc: CCState, line: int, t: float, req: Request):
         cfg = self.cfg
-        self.m.lines_moved += 1
+        cc.m.lines_moved += 1
         page = self.page_of(line)
         mc = self.mc_of(page)
         link = self.links[mc]
         size = cfg.line_bytes + cfg.header_bytes
-        self.m.net_bytes += size
+        cc.m.net_bytes += size
         depart_mc = t + self.net_lat(mc, t) + cfg.remote_mem_lat
 
         def on_tx_done(tt: float):
             arrive = tt + self.net_lat(mc, tt)
-            self.eng.at(arrive, lambda a: self._on_line_arrival(line, a))
+            self.eng.at(arrive, lambda a: self._on_line_arrival(cc, line, a))
 
-        self.eng.at(depart_mc, lambda tt: link.send(tt, size, on_tx_done, "line"))
+        self.eng.at(depart_mc,
+                    lambda tt: link.send(tt, size, on_tx_done, "line", cc.idx))
 
-    def _drain_retry(self, t: float):
-        n = len(self.retry)
+    def _drain_retry(self, cc: CCState, t: float):
+        n = len(cc.retry)
         for _ in range(n):
-            req = self.retry.popleft()
+            req = cc.retry.popleft()
             if req.done:
                 continue
             line = req.addr
-            lu, pu = self._buf_utils()
+            lu, pu = self._buf_utils(cc)
             page = self.page_of(line)
-            if line in self.pending_lines:
-                self.pending_lines[line].append(req)
-            elif page in self.pending_pages:
-                self.pending_pages[page].append(req)
+            if line in cc.pending_lines:
+                cc.pending_lines[line].append(req)
+            elif page in cc.pending_pages:
+                cc.pending_pages[page].append(req)
             elif lu < 1.0:
-                self.pending_lines[line] = [req]
-                self._fetch_line_daemon(line, t, req)
+                cc.pending_lines[line] = [req]
+                self._fetch_line_daemon(cc, line, t, req)
             elif pu < self.cfg.page_throttle_hi:
-                self.pending_pages[page] = [req]
-                self._send_page(page, t)
+                cc.pending_pages[page] = [req]
+                self._send_page(cc, page, t)
             else:
-                self.retry.append(req)
+                cc.retry.append(req)
 
     # ---------------- run ----------------
     def run(self) -> Metrics:
         self.start()
         self.eng.run()
-        self.m.cycles = max(c.t_end for c in self.cores)
-        return self.m
+        for cc in self.ccs:
+            cc.m.cycles = max(c.t_end for c in cc.cores)
+        if len(self.ccs) == 1:
+            return self.m  # the aggregate IS the single CC's metrics
+        # aggregate rollup (§2.5): counters sum in CC order, end-to-end
+        # cycles is the makespan, and per_cc keeps the full per-CC split
+        m = self.m
+        for cc in self.ccs:
+            m.accesses += cc.m.accesses
+            m.llc_hits += cc.m.llc_hits
+            m.local_hits += cc.m.local_hits
+            m.remote_misses += cc.m.remote_misses
+            m.miss_latency_sum += cc.m.miss_latency_sum
+            m.net_bytes += cc.m.net_bytes
+            m.pages_moved += cc.m.pages_moved
+            m.lines_moved += cc.m.lines_moved
+            m.bytes_saved_compression += cc.m.bytes_saved_compression
+            m.stall_cycles += cc.m.stall_cycles
+            d = cc.m.as_dict()
+            d.pop("per_cc")
+            d["cc"] = cc.idx
+            m.per_cc.append(d)
+        m.cycles = max(cc.m.cycles for cc in self.ccs)
+        return m
 
 
 def simulate(
-    cfg: SimConfig, scheme: str, traces: List[Trace], workload: str = "", seed: int = 0
+    cfg: SimConfig, scheme: str, traces, workload: str = "", seed: int = 0
 ) -> Metrics:
+    """Run one simulation.  ``traces`` is a flat ``List[Trace]`` for the
+    single-CC model or a ``List[List[Trace]]`` with one group per CC
+    (``len == cfg.n_ccs``); ``workload`` may be a '+'-separated mix assigned
+    round-robin across CCs."""
     return Simulator(cfg, scheme, traces, workload, seed).run()

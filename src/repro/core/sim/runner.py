@@ -8,6 +8,7 @@ out over a process pool (results are identical to the serial run).
   fig2(...)   scheme x workload grid      (paper Fig. 2)
   fig4_top(...) bw x n_mcs x workload     (paper Fig. 4 top)
   fig4_bottom(...) multi-job interference (paper Fig. 4 bottom)
+  fig5_scalability(...) n_ccs x scheme x workload-mix (multi-CC contention)
   paper_claims(...) geomean speedups of daemon over page
 """
 from __future__ import annotations
@@ -197,6 +198,64 @@ def fig4_bottom(
                 "access_cost_ratio": mp.avg_access_cost / max(md.avg_access_cost, 1e-9),
             }
         )
+    return rows
+
+
+DEFAULT_CC_MIXES = ("pr", "pr+st", "dr+st+pr+ml")
+
+
+def fig5_scalability_spec(
+    workload_mixes: Iterable[str] = DEFAULT_CC_MIXES,
+    n_ccs_list: Iterable[int] = (1, 2, 4, 8),
+    *,
+    cfg: Optional[SimConfig] = None,
+    **kw,
+) -> Sweep:
+    """The canonical multi-CC scalability grid (DESIGN.md §2.5): n_ccs
+    compute complexes, each running a full application (a '+'-mix assigns
+    workloads round-robin across CCs), contending for the shared MC
+    downlink.  Shared by the API and benchmarks/fig5_scalability.py so the
+    'fig5_scalability' BENCH_sim.json entry has one meaning."""
+    axes = {
+        "workload": tuple(workload_mixes),
+        "n_ccs": tuple(n_ccs_list),
+        "scheme": ("page", "daemon"),
+    }
+    return Sweep(name="fig5_scalability", axes=axes,
+                 base=cfg or SimConfig(link_bw_frac=0.25), **_sweep_kw(kw))
+
+
+def fig5_scalability(
+    workload_mixes: Iterable[str] = DEFAULT_CC_MIXES,
+    n_ccs_list: Iterable[int] = (1, 2, 4, 8),
+    *,
+    cfg: Optional[SimConfig] = None,
+    workers: Optional[int] = None,
+    **kw,
+) -> List[dict]:
+    """Daemon-vs-page speedup as a function of CC count: per (mix, n_ccs)
+    rows plus the per-n_ccs geomean over the mixes."""
+    sw = fig5_scalability_spec(workload_mixes, n_ccs_list, cfg=cfg, **kw)
+    res = run_sweep(sw, workers=workers)
+    g = res.grid("workload", "n_ccs", "scheme")
+    rows = []
+    for n_ccs in sw.axes["n_ccs"]:
+        ratios = []
+        for mix in sw.axes["workload"]:
+            mp = g[(mix, n_ccs, "page")].metrics
+            md = g[(mix, n_ccs, "daemon")].metrics
+            ratios.append(mp.cycles / md.cycles)
+            rows.append(
+                {
+                    "workload": mix,
+                    "n_ccs": n_ccs,
+                    "speedup": mp.cycles / md.cycles,
+                    "access_cost_ratio": mp.avg_access_cost / max(md.avg_access_cost, 1e-9),
+                    "net_bytes_ratio": mp.net_bytes / max(md.net_bytes, 1e-9),
+                }
+            )
+        rows.append({"workload": "geomean", "n_ccs": n_ccs,
+                     "speedup": geomean(ratios)})
     return rows
 
 

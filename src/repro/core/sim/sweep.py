@@ -28,12 +28,12 @@ import os
 import time
 import zlib
 from concurrent.futures import ProcessPoolExecutor
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass
 from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
-from repro.core.sim.config import SCHEMES, Metrics, SimConfig
+from repro.core.sim.config import Metrics, SimConfig
 from repro.core.sim.engine import simulate
-from repro.core.sim.trace import WORKLOADS, generate
+from repro.core.sim.trace import generate
 
 BENCH_SCHEMA = "repro.sim.sweep/v1"
 
@@ -58,13 +58,35 @@ def run_one(
     n_jobs: int = 1,
 ) -> Metrics:
     """One application = cfg.n_cores threads of the workload (multicore CC);
-    n_jobs > 1 stacks additional independent applications on the same CC."""
+    n_jobs > 1 stacks additional independent applications on the same CC.
+
+    With ``cfg.n_ccs > 1`` every CC runs its own full application
+    (``n_accesses`` is per CC, so aggregate traffic scales with the CC
+    count — the contention the multi-CC model measures).  ``workload`` may
+    be a '+'-separated mix ('pr+st'): CC ``c`` runs ``parts[c % len(parts)]``,
+    so with fewer CCs than parts the tail parts do NOT run (a 4-part mix at
+    n_ccs=1 is a pure parts[0] run) and the workload composition of a mix
+    varies with n_ccs.  Scheme comparisons at a fixed (mix, n_ccs) cell are
+    always composition-matched; trend reads *across* n_ccs are
+    composition-stable only for mixes whose length divides every compared
+    CC count (e.g. a single workload).  CC 0's trace seeds match the
+    single-CC model exactly."""
     cfg = cfg or SimConfig()
+    n_ccs = max(1, cfg.n_ccs)
+    parts = tuple(workload.split("+")) if workload else (workload,)
     n_threads = max(1, cfg.n_cores) * max(1, n_jobs)
     per = max(1, n_accesses // n_threads)
-    traces = [generate(workload, seed=seed + j, footprint=footprint, n=per)
-              for j in range(n_threads)]
-    return simulate(cfg, scheme, traces, workload=workload, seed=seed)
+    if n_ccs == 1 and len(parts) == 1:
+        traces = [generate(workload, seed=seed + j, footprint=footprint, n=per)
+                  for j in range(n_threads)]
+        return simulate(cfg, scheme, traces, workload=workload, seed=seed)
+    cc_traces = [
+        [generate(parts[c % len(parts)], seed=seed + c * n_threads + j,
+                  footprint=footprint, n=per)
+         for j in range(n_threads)]
+        for c in range(n_ccs)
+    ]
+    return simulate(cfg, scheme, cc_traces, workload=workload, seed=seed)
 
 
 # --------------------------------------------------------------------------

@@ -14,7 +14,6 @@ locality ~64 lines/page).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Callable, Dict, Tuple
 
 import numpy as np

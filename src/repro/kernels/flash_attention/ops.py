@@ -6,7 +6,6 @@ import functools
 
 import jax
 
-from repro.kernels.flash_attention import ref
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
 
 

@@ -186,9 +186,6 @@ class Analyzer:
         if cm and cm.group(1) in self.comps:
             consts = []
             for o in self.comps[cm.group(1)].ops:
-                c = re.search(r"constant\((\d+)\)", o.attrs) or re.search(
-                    r"constant\((\d+)\)", o.opcode
-                )
                 if o.opcode == "constant":
                     c2 = re.search(r"\((\d+)\)", o.attrs)
                     if c2:

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 # ---- TPU v5e hardware constants (per chip) --------------------------------
 PEAK_FLOPS = 197e12  # bf16

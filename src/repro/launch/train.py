@@ -12,14 +12,11 @@ full configs go through the dry-run instead.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
-from pathlib import Path
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config

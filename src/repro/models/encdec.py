@@ -6,7 +6,7 @@ cross-attention over encoder states (K/V cached once at prefill).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import mamba, nn
-from repro.models.nn import ParamSpec, logical_constraint
+from repro.models.nn import ParamSpec
 
 
 def n_invocations(cfg: ModelConfig) -> int:

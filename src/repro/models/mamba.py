@@ -12,7 +12,7 @@ TPU (kernels/mamba_scan validates against this path).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

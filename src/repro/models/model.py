@@ -12,12 +12,10 @@ vocab-sharded) head so full (B, S, V) logits are never materialized.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeCell
 from repro.models import encdec, hybrid, mamba, nn, transformer

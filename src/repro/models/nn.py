@@ -9,7 +9,6 @@ definition runs on 1 CPU device, a 16x16 pod, or the 2x16x16 multi-pod mesh.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 

@@ -9,7 +9,6 @@ in seconds).  Caches are stacked the same way and co-scanned at decode.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 

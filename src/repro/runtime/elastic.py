@@ -11,7 +11,7 @@ re-shard (checkpoint/ckpt.py).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Tuple
 
 
 @dataclass(frozen=True)

@@ -116,7 +116,7 @@ def test_selection_unit_hysteresis():
     su = SelectionUnit(hold_steps=5)
     assert su.config().param_gather == "bf16"
     # sustained collective pressure escalates once per hold window
-    c = su.observe(0, collective_s=10.0, compute_s=1.0)
+    su.observe(0, collective_s=10.0, compute_s=1.0)
     assert su._level == 2  # noqa: SLF001 — starts at 1, escalates
     for s in range(1, 4):
         su.observe(s, 10.0, 1.0)

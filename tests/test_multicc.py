@@ -1,0 +1,151 @@
+"""Multi-CC system model tests (DESIGN.md §2.5): n_ccs=1 bit-parity with
+the legacy single-CC engine, determinism under the process-pool sweep,
+per-CC metric rollups, and the contention regression — the page scheme's
+slowdown grows with the CC count while DaeMon's line latency stays bounded
+behind the reserved line share."""
+import pytest
+
+from repro.core.sim import SimConfig, Sweep, run_one, run_sweep, simulate
+from repro.core.sim.trace import generate
+
+N = 6_000
+
+
+# Golden metrics captured from the single-CC engine BEFORE the multi-CC
+# refactor (run_one(w, s, SimConfig(link_bw_frac=0.25), seed=1,
+# n_accesses=6000) at commit 9d8f995).  n_ccs=1 must reproduce these
+# bit-for-bit for all six schemes — the invariant that keeps every
+# committed BENCH result valid.
+GOLD = {
+    "pr/local": {"cycles": 54630.0, "net_bytes": 0.0,
+                 "miss_latency_sum": 1795500.0, "pages_moved": 0,
+                 "lines_moved": 0, "local_hits": 5985, "remote_misses": 0},
+    "pr/page": {"cycles": 2166976.0, "net_bytes": 17336192.0,
+                "miss_latency_sum": 118241362.0, "pages_moved": 4079,
+                "lines_moved": 0, "local_hits": 1651, "remote_misses": 4334},
+    "pr/page_free": {"cycles": 54630.0, "net_bytes": 555120.0,
+                     "miss_latency_sum": 1795500.0, "pages_moved": 4140,
+                     "lines_moved": 0, "local_hits": 1845,
+                     "remote_misses": 4140},
+    "pr/cacheline": {"cycles": 503855.0, "net_bytes": 467600.0,
+                     "miss_latency_sum": 37422190.0, "pages_moved": 0,
+                     "lines_moved": 5845, "local_hits": 0,
+                     "remote_misses": 5985},
+    "pr/both": {"cycles": 2210266.0, "net_bytes": 17681232.0,
+                "miss_latency_sum": 123816671.0, "pages_moved": 4079,
+                "lines_moved": 4313, "local_hits": 1652,
+                "remote_misses": 4333},
+    "pr/daemon": {"cycles": 503197.3333333333, "net_bytes": 1497893.3593311892,
+                  "miss_latency_sum": 31699555.11210921, "pages_moved": 731,
+                  "lines_moved": 5054, "local_hits": 855,
+                  "remote_misses": 5130},
+    "st/local": {"cycles": 49537.0, "net_bytes": 0.0,
+                 "miss_latency_sum": 1800000.0, "pages_moved": 0,
+                 "lines_moved": 0, "local_hits": 6000, "remote_misses": 0},
+    "st/page": {"cycles": 206120.0, "net_bytes": 180928.0,
+                "miss_latency_sum": 13013075.0, "pages_moved": 24,
+                "lines_moved": 0, "local_hits": 4275, "remote_misses": 1725},
+    "st/page_free": {"cycles": 49537.0, "net_bytes": 82240.0,
+                     "miss_latency_sum": 1800000.0, "pages_moved": 24,
+                     "lines_moved": 0, "local_hits": 5976,
+                     "remote_misses": 24},
+    "st/cacheline": {"cycles": 489968.0, "net_bytes": 120000.0,
+                     "miss_latency_sum": 34830533.0, "pages_moved": 0,
+                     "lines_moved": 1500, "local_hits": 0,
+                     "remote_misses": 6000},
+    "st/both": {"cycles": 204510.0, "net_bytes": 219968.0,
+                "miss_latency_sum": 9947746.0, "pages_moved": 24,
+                "lines_moved": 488, "local_hits": 4183,
+                "remote_misses": 1817},
+    "st/daemon": {"cycles": 205603.0, "net_bytes": 182848.0,
+                  "miss_latency_sum": 12995809.666666666, "pages_moved": 24,
+                  "lines_moved": 24, "local_hits": 4183,
+                  "remote_misses": 1817},
+}
+
+
+def test_nccs1_bit_parity_with_legacy_engine():
+    """n_ccs=1 reproduces the pre-refactor single-CC metrics bit-for-bit
+    across all six schemes (explicit n_ccs=1 and the default both)."""
+    for key, exp in GOLD.items():
+        w, s = key.split("/")
+        for cfg in (SimConfig(link_bw_frac=0.25),
+                    SimConfig(link_bw_frac=0.25, n_ccs=1)):
+            m = run_one(w, s, cfg, seed=1, n_accesses=N)
+            for name, v in exp.items():
+                assert getattr(m, name) == v, (key, name)
+            assert m.per_cc == []  # single-CC: the aggregate IS the CC
+
+
+def test_multicc_trace_group_shape_is_validated():
+    traces = [generate("pr", seed=0, footprint=1 << 20, n=200)]
+    with pytest.raises(ValueError, match="n_ccs"):
+        simulate(SimConfig(n_ccs=2), "page", traces, workload="pr")
+
+
+def test_multicc_per_cc_rollup_consistent():
+    """Aggregate counters are the sum of per_cc; cycles is the makespan;
+    the '+' mix assigns workloads round-robin across CCs."""
+    m = run_one("pr+st", "daemon", SimConfig(n_ccs=4, link_bw_frac=0.25),
+                n_accesses=4_000)
+    assert [d["workload"] for d in m.per_cc] == ["pr", "st", "pr", "st"]
+    assert [d["cc"] for d in m.per_cc] == [0, 1, 2, 3]
+    for key in ("accesses", "llc_hits", "local_hits", "remote_misses",
+                "net_bytes", "pages_moved", "lines_moved",
+                "miss_latency_sum", "stall_cycles"):
+        assert sum(d[key] for d in m.per_cc) == pytest.approx(
+            getattr(m, key)), key
+    assert m.cycles == max(d["cycles"] for d in m.per_cc)
+
+
+def test_multicc_sweep_parallel_equals_serial():
+    """Multi-CC cells keep the sweep-engine determinism guarantee: a
+    process-pool run is cell-for-cell identical to the serial run."""
+    sw = Sweep(
+        name="mcc",
+        axes={"workload": ("pr+st",), "n_ccs": (2, 4),
+              "scheme": ("page", "daemon")},
+        base=SimConfig(link_bw_frac=0.25),
+        n_accesses=3_000,
+    )
+    serial = run_sweep(sw, workers=1)
+    par = run_sweep(sw, workers=2)
+    assert [r.axes for r in serial.rows] == [r.axes for r in par.rows]
+    assert [r.metrics.as_dict() for r in serial.rows] == \
+           [r.metrics.as_dict() for r in par.rows]
+
+
+def test_contention_page_degrades_daemon_lines_bounded():
+    """The paper's multi-CC contention story: stacking CCs on the shared MC
+    downlink slows the page scheme superlinearly (each CC's critical lines
+    wait behind ALL CCs' page bursts), while DaeMon's reserved line share
+    keeps its average access cost bounded."""
+    cfg = SimConfig(link_bw_frac=0.25)
+    page_slow, daemon_cost = {}, {}
+    for n in (1, 2, 4):
+        c = cfg.with_(n_ccs=n)
+        page_slow[n] = run_one("pr", "page", c, n_accesses=4_000).cycles
+        daemon_cost[n] = run_one("pr", "daemon", c, n_accesses=4_000).avg_access_cost
+    # page-scheme slowdown grows with every added CC
+    assert page_slow[2] > page_slow[1] * 1.2, page_slow
+    assert page_slow[4] > page_slow[2] * 1.2, page_slow
+    # daemon's average miss latency stays bounded (not the page scheme's
+    # multiplicative collapse) thanks to the fixed-rate line share
+    assert daemon_cost[4] < daemon_cost[1] * 3.0, daemon_cost
+    page_cost_1 = run_one("pr", "page", cfg, n_accesses=4_000).avg_access_cost
+    page_cost_4 = run_one("pr", "page", cfg.with_(n_ccs=4),
+                          n_accesses=4_000).avg_access_cost
+    assert page_cost_4 / page_cost_1 > daemon_cost[4] / daemon_cost[1]
+
+
+def test_daemon_advantage_grows_with_ccs():
+    """Acceptance: daemon-vs-page speedup increases monotonically in n_ccs
+    (the fig5_scalability headline) on a representative mix."""
+    prev = 0.0
+    for n in (1, 2, 4, 8):
+        cfg = SimConfig(n_ccs=n, link_bw_frac=0.25)
+        p = run_one("pr+st", "page", cfg, n_accesses=1_500)
+        d = run_one("pr+st", "daemon", cfg, n_accesses=1_500)
+        ratio = p.cycles / d.cycles
+        assert ratio > prev, (n, ratio, prev)
+        prev = ratio

@@ -7,7 +7,6 @@ import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.sim.config import SimConfig
 from repro.core.sim.engine import LRU, DualQueueLink, Engine
 from repro.optim import schedule
 from repro.runtime.elastic import plan_mesh

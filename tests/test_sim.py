@@ -1,11 +1,9 @@
 """Faithful-reproduction tests for the DaeMon DS simulator (paper §3/§4):
 scheme ordering, robustness (daemon never loses to page), the headline
 geomean claims, and Fig-4-style sweeps."""
-import pytest
 
 from repro.core.sim import (
-    SCHEMES, SimConfig, fig2, fig4_bottom, fig4_top, geomean, paper_claims,
-    run_one, slowdowns,
+    SimConfig, fig4_bottom, fig4_top, paper_claims, run_one,
 )
 
 N = 15_000  # accesses per thread-group: fast but statistically stable

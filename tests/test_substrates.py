@@ -2,8 +2,6 @@
 save/restore/corruption/async/gc, fault-tolerance state machines, elastic
 mesh planning, schedules, and the end-to-end train driver (incl. crash +
 resume and daemon movement)."""
-import os
-import time
 
 import jax
 import jax.numpy as jnp
