@@ -6,12 +6,14 @@ tolerance (default 5%).  The committed BENCH_sim.json is the output of the
 exact CI command::
 
     PYTHONPATH=src python benchmarks/run.py --quick \
-        --only fig2,fig4_top,fig4_bottom,sweep_jitter,sweep_nmcs,fig5
+        --only fig2,fig4_top,fig4_bottom,sweep_jitter,sweep_nmcs,fig5,fig6
 
 so CI can regenerate it deterministically and fail the workflow when a
 code change moves any geomean by more than the tolerance — in EITHER
 direction: a >5% improvement means the committed ledger is stale and must
-be regenerated alongside the change.
+be regenerated alongside the change.  Gated keys are the derived
+``daemon_vs_page_geomean*`` entries plus the fig6 ablation
+``policy_vs_page_geomean@<policy>`` entries.
 
 Comparisons are refused (exit 1) when a section's sweep spec — axes,
 n_accesses, footprint, seeding, base SimConfig — differs between baseline
@@ -30,7 +32,11 @@ import argparse
 import json
 import sys
 
-GATED_PREFIX = "daemon_vs_page_geomean"
+GATED_PREFIXES = ("daemon_vs_page_geomean", "policy_vs_page_geomean")
+
+
+def _gated(key: str) -> bool:
+    return key.startswith(GATED_PREFIXES)
 
 
 def load_sweeps(path: str) -> dict:
@@ -47,7 +53,7 @@ def compare(baseline: dict, fresh: dict, tol: float,
     'ok', 'regression', 'spec-mismatch', 'missing-section', 'missing-key'."""
     names = sections if sections else sorted(
         n for n in baseline if any(
-            k.startswith(GATED_PREFIX) for k in baseline[n].get("derived", {})))
+            _gated(k) for k in baseline[n].get("derived", {})))
     for name in names:
         if name not in baseline:
             yield (name, "", None, None, 0.0, "missing-section")
@@ -64,7 +70,7 @@ def compare(baseline: dict, fresh: dict, tol: float,
             bd = b.get("derived", {})
             fd = f.get("derived", {})
             for key in sorted(bd):
-                if not key.startswith(GATED_PREFIX):
+                if not _gated(key):
                     continue
                 if key not in fd:
                     yield (name, key, bd[key], None, 0.0, "missing-key")
@@ -110,7 +116,10 @@ def main() -> None:
                   f"ledger with the CI quick command")
         else:
             failures += 1
-            print(f"FAIL  {name}/{key or '<section>'}: {status}")
+            print(f"FAIL  {name}/{key or '<section>'}: {status} "
+                  f"(see `PYTHONPATH=src python -m benchmarks.run --list` "
+                  f"for the known sections and registered "
+                  f"policies/workloads)")
     if checked == 0 and failures == 0:
         sys.exit("no gated derived keys found — nothing was checked")
     if failures:

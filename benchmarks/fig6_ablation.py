@@ -1,0 +1,68 @@
+"""Paper ablation study (fig6): each of DaeMon's techniques contributes,
+the synergy dominates.
+
+One declarative Sweep over policy x workload at the congested end of the
+network range (link_bw_frac=0.125).  The ablation policies strip the full
+daemon composition down technique by technique (policy.py / DESIGN.md
+§2.6) — three remove exactly one technique, both_dualq keeps only the
+first two:
+
+  both_dualq        — decoupled movement + partitioning only (no selection
+                      unit, no throttle, no compression)
+  daemon_fifo       — daemon minus bandwidth partitioning
+  daemon_fixed_gran — daemon minus adaptive granularity selection
+  daemon_nocomp     — daemon minus link compression
+
+The per-policy geomean speedups over 'page' merge into BENCH_sim.json
+(docs/SWEEPS.md) under ``policy_vs_page_geomean@<policy>`` and are gated in
+CI by check_bench.py.  The paper's synergy claim shows up as every ablation
+landing strictly between 'page' (1.0) and 'daemon' on the geomean.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core.sim import (
+    default_workers,
+    fig6_ablation_spec,
+    fig6_geomeans,
+    run_sweep,
+    write_bench,
+)
+
+from benchmarks import BENCH_PATH
+
+
+def run(n_accesses: int = 20_000, workers: int | None = None,
+        bench_path: str = BENCH_PATH):
+    workers = default_workers() if workers is None else workers
+    sw = fig6_ablation_spec(n_accesses=n_accesses)
+    res = run_sweep(sw, workers=workers)
+    per_call = res.us_per_call  # per-cell sim cost, worker-count independent
+    rows, derived = [], {}
+    for row in fig6_geomeans(res):  # the same numbers runner.fig6_ablation returns
+        p, gm = row["policy"], row["geomean_vs_page"]
+        derived[f"policy_vs_page_geomean@{p}"] = gm
+        rows.append((f"fig6/{p}/geomean_vs_page", per_call, f"speedup={gm:.3f}"))
+        for w, r in row["per_workload"].items():
+            rows.append((f"fig6/{p}/{w}", per_call, f"speedup={r:.3f}"))
+    write_bench(bench_path, res, derived=derived)
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--n-accesses", type=int, default=20_000)
+    args = ap.parse_args()
+    for tag, us, derived in run(args.n_accesses, args.workers):
+        print(f"{tag},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,8 @@
 # Simulator sections run as declarative Sweeps on the parallel sweep engine
 # (docs/SWEEPS.md) and merge their grids into BENCH_sim.json at the repo
 # root.  ``--quick`` shrinks every grid for CI smoke runs; ``--only`` selects
-# sections by name.
+# sections by name; ``--list`` prints the registered policies, workloads,
+# and sections without running anything.
 from __future__ import annotations
 
 import os
@@ -11,6 +12,39 @@ import sys
 
 # support both `python -m benchmarks.run` and `python benchmarks/run.py`
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def list_registries(section_names) -> None:
+    """--list: the registered policies (component matrix), workloads
+    (metadata), and benchmark sections."""
+    from repro.core.sim import (
+        available_policies,
+        available_workloads,
+        get_policy,
+        get_workload,
+    )
+
+    print("policies (name: granularity/partitioning/compression"
+          "/throttle[/flags]):")
+    for name in available_policies():
+        p = get_policy(name)
+        flags = []
+        if p.free_transfers:
+            flags.append("free")
+        if not p.page_carries_requests:
+            flags.append("race")
+        if p.line_share is not None:
+            flags.append(f"line_share={p.line_share}")
+        comp = "/".join([p.granularity, p.partitioning, p.compression,
+                         "throttle" if p.throttle else "nothrottle"]
+                        + flags)
+        print(f"  {name:18s} {comp:44s} {p.description}")
+    print("workloads (name: compressibility, description):")
+    for name in available_workloads():
+        w = get_workload(name)
+        print(f"  {name:18s} x{w.compressibility:<4.1f} {w.description}")
+    print("sections:")
+    print("  " + ",".join(section_names))
 
 
 def main() -> None:
@@ -22,20 +56,26 @@ def main() -> None:
         fig4_multijob,
         fig4_robustness,
         fig5_scalability,
+        fig6_ablation,
         roofline,
     )
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="tiny grids (CI smoke): 10x fewer simulated accesses")
+                    help="tiny grids (CI smoke): 5-10x fewer simulated accesses")
     ap.add_argument("--only", default="",
                     help="comma-separated section names to run")
     ap.add_argument("--workers", type=int, default=None,
                     help="sweep worker processes (default: all cores)")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered policies, workloads, and sections")
     args = ap.parse_args()
 
     n_fig2 = 2_000 if args.quick else 20_000
     n_fig4 = 1_500 if args.quick else 15_000
+    # fig6 needs >= 1000 accesses/thread so the 'ph' workload actually
+    # alternates phases (epoch = 500 accesses)
+    n_fig6 = 4_000 if args.quick else 20_000
     w = args.workers
     sections = [
         ("fig2", lambda: fig2_schemes.run(n_accesses=n_fig2, workers=w)),
@@ -44,16 +84,21 @@ def main() -> None:
         ("sweep_jitter", lambda: fig4_robustness.run_jitter(n_accesses=n_fig4, workers=w)),
         ("sweep_nmcs", lambda: fig4_robustness.run_nmcs(n_accesses=n_fig4, workers=w)),
         ("fig5", lambda: fig5_scalability.run(n_accesses=n_fig4, workers=w)),
+        ("fig6", lambda: fig6_ablation.run(n_accesses=n_fig6, workers=w)),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]
+    if args.list:
+        list_registries([s[0] for s in sections])
+        return
     if args.only:
         keep = {s.strip() for s in args.only.split(",") if s.strip()}
         known = {s[0] for s in sections}
         unknown = keep - known
         if unknown:
             sys.exit(f"unknown --only section(s) {sorted(unknown)}; "
-                     f"choose from {sorted(known)}")
+                     f"choose from {sorted(known)} "
+                     f"(see `PYTHONPATH=src python -m benchmarks.run --list`)")
         sections = [s for s in sections if s[0] in keep]
 
     print("name,us_per_call,derived")

@@ -1,6 +1,14 @@
 from repro.core.sim.config import SCHEMES, Metrics, SimConfig
 from repro.core.sim.engine import LinkSchedule, Simulator, simulate
+from repro.core.sim.policy import (
+    MovementPolicy,
+    available_policies,
+    get_policy,
+    register_policy,
+    unregister_policy,
+)
 from repro.core.sim.runner import (
+    ABLATION_POLICIES,
     fig2,
     fig2_spec,
     fig2_sweep,
@@ -10,6 +18,9 @@ from repro.core.sim.runner import (
     fig4_top_spec,
     fig5_scalability,
     fig5_scalability_spec,
+    fig6_ablation,
+    fig6_ablation_spec,
+    fig6_geomeans,
     geomean,
     paper_claims,
     run_one,
@@ -26,14 +37,32 @@ from repro.core.sim.sweep import (
     scheme_ratio,
     write_bench,
 )
-from repro.core.sim.trace import WORKLOADS, generate
+from repro.core.sim.trace import (
+    DEFAULT_SUITE,
+    WORKLOADS,
+    WorkloadSpec,
+    available_workloads,
+    generate,
+    get_workload,
+    register_trace_file,
+    register_workload,
+    save_trace,
+    unregister_workload,
+)
 
 __all__ = [
     "SCHEMES", "Metrics", "SimConfig", "Simulator", "simulate", "LinkSchedule",
+    "MovementPolicy", "available_policies", "get_policy", "register_policy",
+    "unregister_policy",
+    "ABLATION_POLICIES",
     "fig2", "fig2_spec", "fig2_sweep", "fig4_bottom", "fig4_bottom_spec",
     "fig4_top", "fig4_top_spec", "fig5_scalability", "fig5_scalability_spec",
+    "fig6_ablation", "fig6_ablation_spec", "fig6_geomeans",
     "geomean", "paper_claims",
-    "run_one", "slowdowns", "WORKLOADS", "generate",
+    "run_one", "slowdowns",
+    "DEFAULT_SUITE", "WORKLOADS", "WorkloadSpec", "available_workloads",
+    "generate", "get_workload", "register_trace_file", "register_workload",
+    "save_trace", "unregister_workload",
     "CellResult", "Sweep", "SweepResult", "cell_seed", "default_workers",
     "run_sweep", "scheme_geomean", "scheme_ratio", "write_bench",
 ]

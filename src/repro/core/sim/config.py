@@ -8,7 +8,12 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
 
+# The paper's six schemes, in figure order.  Since the policy registry
+# (policy.py) these are just the six legacy *registered compositions*;
+# `available_policies()` lists every registered policy including ablations.
 SCHEMES = ("local", "page", "page_free", "cacheline", "both", "daemon")
+
+MC_INTERLEAVES = ("page", "hash", "single")
 
 
 @dataclass(frozen=True)
@@ -63,6 +68,30 @@ class SimConfig:
     compress: bool = True
     comp_lat: int = 750  # page compression latency at the MC (~250 ns)
     decomp_lat: int = 750  # page decompression latency at the CC
+
+    def __post_init__(self):
+        """Fail-fast validation at config construction time (DESIGN.md §2.1)
+        — a bad parameter should never survive until deep inside a sweep."""
+        if self.mc_interleave not in MC_INTERLEAVES:
+            raise ValueError(
+                f"mc_interleave={self.mc_interleave!r} not in {MC_INTERLEAVES}")
+        for name, lo in (("n_ccs", 1), ("n_mcs", 1), ("n_cores", 1),
+                         ("line_bytes", 1), ("page_bytes", 1), ("mlp", 1)):
+            if getattr(self, name) < lo:
+                raise ValueError(f"{name}={getattr(self, name)} must be >= {lo}")
+        if self.page_bytes % self.line_bytes:
+            raise ValueError(
+                f"page_bytes={self.page_bytes} must be a multiple of "
+                f"line_bytes={self.line_bytes}")
+        for name in ("bus_bw", "link_bw_frac", "local_mem_frac", "gap_scale"):
+            if getattr(self, name) <= 0:
+                raise ValueError(f"{name}={getattr(self, name)} must be > 0")
+        if not (0.0 < self.line_share < 1.0):
+            raise ValueError(f"line_share={self.line_share} must be in (0, 1)")
+        for name in ("bw_jitter", "lat_jitter"):
+            if not (0.0 <= getattr(self, name) <= 1.0):
+                raise ValueError(
+                    f"{name}={getattr(self, name)} must be in [0, 1]")
 
     @property
     def link_bw(self) -> float:

@@ -1,18 +1,17 @@
-"""Event-driven simulator of a disaggregated system (CCs + MCs + network),
-implementing the paper's data-movement schemes:
+"""Event-driven simulator of a disaggregated system (CCs + MCs + network).
 
-  local      — monolithic upper bound: every LLC miss is a local DRAM access
-  page       — migrate 4 KiB pages into local memory over a FIFO link
-  page_free  — page scheme with zero-cost transfers (idealized locality bound)
-  cacheline  — move only 64 B lines into the LLC (no local-memory migration)
-  both       — naively issue line+page on the SAME FIFO link; first wins
-  daemon     — DaeMon: decoupled line/page queues with fixed-rate bandwidth
-               partitioning, inflight-buffer-driven selection unit, and link
-               compression on page movements only
+Data movement is governed by a composable :class:`~repro.core.sim.policy.
+MovementPolicy` (DESIGN.md §2.6): the engine dispatches on the policy's
+orthogonal *components* — ``granularity`` (none/line/page/both/adaptive),
+``partitioning`` (fifo/dual), ``compression`` (off/link), ``throttle`` —
+never on policy names, so registering a new composition requires no engine
+edits.  The paper's six schemes are the registered legacy compositions
+(``local``, ``page``, ``page_free``, ``cacheline``, ``both``, ``daemon``),
+bit-identical to the pre-registry engine.
 
-The network link for the baselines is store-and-forward FIFO (this is where
-critical lines queue behind concurrently-moved pages — the paper's core
-pathology).  DaeMon's link is a fluid dual-queue: when both queues are busy
+The FIFO partitioning is store-and-forward (this is where critical lines
+queue behind concurrently-moved pages — the paper's core pathology).  The
+dual partitioning is DaeMon's fluid dual-queue: when both queues are busy
 the sub-block queue drains at a fixed ``line_share`` of the bandwidth, i.e.
 the paper's queue controller serving lines at a higher predefined fixed rate.
 
@@ -37,7 +36,8 @@ from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.sim.config import Metrics, SimConfig
-from repro.core.sim.trace import COMPRESSIBILITY, Trace
+from repro.core.sim.policy import get_policy
+from repro.core.sim.trace import Trace, compressibility_of
 
 
 # --------------------------------------------------------------------------
@@ -549,17 +549,20 @@ class Simulator:
     def __init__(
         self,
         cfg: SimConfig,
-        scheme: str,
+        scheme,
         traces,
         workload: str = "",
         seed: int = 0,
     ):
+        """``scheme`` is a registered policy name (str) or a
+        :class:`MovementPolicy` instance (need not be registered)."""
         self.cfg = cfg
-        self.scheme = scheme
+        self.policy = get_policy(scheme)
+        self.scheme = self.policy.name
         self.workload = workload
         self.eng = Engine()
         self.rng = np.random.default_rng(seed + 17)
-        self.m = Metrics(scheme=scheme, workload=workload)
+        self.m = Metrics(scheme=self.scheme, workload=workload)
 
         # traces: List[Trace] (legacy, one CC) or List[List[Trace]] (one
         # group per CC).  A Trace is a tuple of ndarrays, so the first
@@ -593,16 +596,15 @@ class Simulator:
             local = LRU(max(1, int(n_pages_total * cfg.local_mem_frac)))
             # the single-CC aggregate IS the CC's metrics (legacy identity);
             # multi-CC keeps per-CC metrics and rolls them up in run()
-            m = self.m if len(cc_traces) == 1 else Metrics(scheme=scheme, workload=w)
+            m = self.m if len(cc_traces) == 1 else Metrics(scheme=self.scheme,
+                                                           workload=w)
             self.ccs.append(CCState(
                 idx=i, workload=w, cores=cores, local=local, m=m,
-                comp_base=COMPRESSIBILITY.get(w if len(parts) > 1 else workload, 2.0),
+                comp_base=compressibility_of(w if len(parts) > 1 else workload),
             ))
         self.cores = [c for cc in self.ccs for c in cc.cores]
         n_ccs = len(self.ccs)
 
-        if cfg.mc_interleave not in ("page", "hash", "single"):
-            raise ValueError(f"mc_interleave={cfg.mc_interleave!r}")
         # per-MC variability schedules: seeded by (jitter_seed, mc) only, so
         # every scheme sees the same network weather (fair A/B comparison)
         self.scheds = [
@@ -612,13 +614,16 @@ class Simulator:
         ]
         # per-MC links (downlink data path; request path folded into net_lat).
         # Single-CC systems keep the legacy link classes (bit-identical);
-        # multi-CC systems share each MC downlink across per-CC flows.
-        if scheme == "daemon":
+        # multi-CC systems share each MC downlink across per-CC flows.  The
+        # policy's partitioning component picks the arbitration.
+        if self.policy.partitioning == "dual":
+            share = (cfg.line_share if self.policy.line_share is None
+                     else self.policy.line_share)
             mk = (
-                (lambda s: DualQueueLink(self.eng, cfg.link_bw, cfg.line_share, s))
+                (lambda s: DualQueueLink(self.eng, cfg.link_bw, share, s))
                 if n_ccs == 1
                 else (lambda s: SharedDualQueueLink(
-                    self.eng, cfg.link_bw, cfg.line_share, n_ccs, s))
+                    self.eng, cfg.link_bw, share, n_ccs, s))
             )
         else:
             mk = (
@@ -708,7 +713,7 @@ class Simulator:
         if ev is not None and ev[1]:  # dirty eviction -> writeback
             self._send_page(cc, ev[0], t, writeback=True)
 
-    # ---------------- miss handling per scheme ----------------
+    # ---------------- miss handling per policy ----------------
     def _local_hit(self, cc: CCState, core: Core, line: int, wr: bool, t: float) -> None:
         """DRAM access in local memory: async within the MLP window."""
         cc.m.local_hits += 1
@@ -717,34 +722,38 @@ class Simulator:
         self.eng.at(t + self.cfg.mem_lat, lambda tt: self._complete(req, tt))
 
     def miss(self, cc: CCState, core: Core, line: int, wr: bool, t: float) -> Optional[float]:
-        scheme = self.scheme
+        """LLC-miss path, dispatched on the policy's *components* (DESIGN.md
+        §2.6) — never on policy names, so new registered compositions need
+        no edits here."""
+        pol = self.policy
+        gran = pol.granularity
         page = self.page_of(line)
 
-        if scheme == "local":
+        if gran == "none":  # monolithic: every miss is local DRAM
             self._local_hit(cc, core, line, wr, t)
             return None
 
-        if scheme == "cacheline":
+        if gran == "line":  # line movement only, no local-memory migration
             cc.m.remote_misses += 1
             req = self._mk_req(core, line, wr, t)
             self._fetch_line(cc, line, t, req)
             return None
 
-        # page-based schemes check local memory first
+        # page-moving policies check local memory first
         if cc.local.access(page, wr):
             self._local_hit(cc, core, line, wr, t)
             return None
 
         cc.m.remote_misses += 1
 
-        if scheme == "page_free":
+        if pol.free_transfers:  # idealized locality bound
             self._insert_page(cc, page, t)
             cc.m.pages_moved += 1
             cc.m.local_hits -= 1  # counted as remote, not a local hit
             self._local_hit(cc, core, line, wr, t)
             return None
 
-        if scheme == "page":
+        if gran == "page":  # requests ride the page migration
             req = self._mk_req(core, line, wr, t)
             if page in cc.pending_pages:
                 cc.pending_pages[page].append(req)
@@ -753,18 +762,8 @@ class Simulator:
                 self._send_page(cc, page, t)
             return None
 
-        if scheme == "both":
-            req = self._mk_req(core, line, wr, t)
-            self._fetch_line(cc, line, t, req)
-            if page not in cc.pending_pages:
-                cc.pending_pages[page] = []
-                self._send_page(cc, page, t)
-            return None
-
-        if scheme == "daemon":
-            return self._daemon_miss(cc, core, line, wr, t)
-
-        raise ValueError(scheme)
+        # 'both' / 'adaptive': decoupled multi-granularity movement
+        return self._composed_miss(cc, core, line, wr, t)
 
     def _mk_req(self, core: Core, line: int, wr: bool, t: float) -> Request:
         req = Request(line, t, wr, core)
@@ -810,7 +809,8 @@ class Simulator:
         # is streaming, so only the pipeline fill (~1/4 of the full pass)
         # sits on the critical path; the rest overlaps transmission.
         _, pu = self._buf_utils(cc)
-        if self.scheme == "daemon" and cfg.compress and pu > self.PAGE_FAST:
+        if (self.policy.compression != "off" and cfg.compress
+                and pu > self.PAGE_FAST):
             ratio = self.comp_ratio(cc)
             size = cfg.page_bytes / ratio + cfg.header_bytes
             extra = cfg.comp_lat / 4
@@ -849,7 +849,7 @@ class Simulator:
                 self._complete(r, t + self.cfg.mem_lat)  # read from local memory
         self._drain_retry(cc, t)
 
-    # ---------------- DaeMon ----------------
+    # ---------------- decoupled multi-granularity movement ----------------
     def _buf_utils(self, cc: CCState) -> Tuple[float, float]:
         lu = len(cc.pending_lines) / self.cfg.inflight_lines
         pu = len(cc.pending_pages) / self.cfg.inflight_pages
@@ -857,36 +857,53 @@ class Simulator:
 
     PAGE_FAST = 0.3  # inflight-page utilization below which pages drain fast
 
-    def _daemon_miss(self, cc: CCState, core: Core, line: int, wr: bool,
-                     t: float) -> Optional[float]:
-        """Selection unit (paper §3-II): choose line / page / both from the
-        inflight buffer utilizations.  When the page buffer drains fast
-        (compressed pages, page-friendly phase) skip redundant line races;
-        when it backs up (low locality), favor lines and throttle pages."""
-        cfg = self.cfg
+    def _composed_miss(self, cc: CCState, core: Core, line: int, wr: bool,
+                       t: float) -> Optional[float]:
+        """'both'/'adaptive' granularity: issue line and page movements for a
+        triggering miss; requests complete on whichever arrives first.
+
+        With ``granularity='adaptive'`` the selection unit (paper §3-II)
+        modulates this from the inflight-buffer utilizations: when the page
+        buffer drains fast (compressed pages, page-friendly phase) redundant
+        line races on coalesced misses are skipped; when it backs up (low
+        locality), coalesced misses race lines on the critical path.  With
+        ``throttle`` the inflight-buffer caps gate issue (pages stop above
+        ``page_throttle_hi``; full buffers park the request in the retry
+        queue).  ``page_carries_requests=False`` is the legacy 'both' race:
+        the line always carries the request, the page is pure prefetch."""
+        cfg, pol = self.cfg, self.policy
+        adaptive = pol.granularity == "adaptive"
         page = self.page_of(line)
         req = self._mk_req(core, line, wr, t)
         lu, pu = self._buf_utils(cc)
-        pages_fast = pu <= self.PAGE_FAST
 
-        # coalesce with an inflight page migration; race a line only when the
-        # page queue is congested (the line is the critical-path fast path)
+        # coalesce with an inflight page migration
         if page in cc.pending_pages:
-            cc.pending_pages[page].append(req)
+            if pol.page_carries_requests:
+                cc.pending_pages[page].append(req)
             if line in cc.pending_lines:
                 cc.pending_lines[line].append(req)
-            elif not pages_fast and lu < 1.0:
+            elif adaptive:
+                # race a line only when the page queue is congested (the
+                # line is the critical-path fast path)
+                if pu > self.PAGE_FAST and lu < 1.0:
+                    cc.pending_lines[line] = [req]
+                    self._fetch_line_daemon(cc, line, t, req)
+            elif not pol.page_carries_requests:
                 cc.pending_lines[line] = [req]
                 self._fetch_line_daemon(cc, line, t, req)
             return None
 
         # triggering miss: BOTH by default — the line hides page queueing and
         # (de)compression latency, costing only ~80B next to a ~2KB page
-        issue_page = pu < cfg.page_throttle_hi
-        issue_line = lu < 1.0 or line in cc.pending_lines
-        if not issue_line and not issue_page:
-            cc.retry.append(req)  # buffers full: re-issue when one drains
-            return None
+        if pol.throttle:
+            issue_page = pu < cfg.page_throttle_hi
+            issue_line = lu < 1.0 or line in cc.pending_lines
+            if not issue_line and not issue_page:
+                cc.retry.append(req)  # buffers full: re-issue when one drains
+                return None
+        else:
+            issue_page = issue_line = True
 
         if issue_line:
             if line in cc.pending_lines:
@@ -895,7 +912,9 @@ class Simulator:
                 cc.pending_lines[line] = [req]
                 self._fetch_line_daemon(cc, line, t, req)
         if issue_page:
-            cc.pending_pages.setdefault(page, []).append(req)
+            waiting = cc.pending_pages.setdefault(page, [])
+            if pol.page_carries_requests:
+                waiting.append(req)
             self._send_page(cc, page, t)
         return None
 
@@ -969,9 +988,10 @@ class Simulator:
 
 
 def simulate(
-    cfg: SimConfig, scheme: str, traces, workload: str = "", seed: int = 0
+    cfg: SimConfig, scheme, traces, workload: str = "", seed: int = 0
 ) -> Metrics:
-    """Run one simulation.  ``traces`` is a flat ``List[Trace]`` for the
+    """Run one simulation.  ``scheme`` is a registered policy name or a
+    :class:`MovementPolicy`; ``traces`` is a flat ``List[Trace]`` for the
     single-CC model or a ``List[List[Trace]]`` with one group per CC
     (``len == cfg.n_ccs``); ``workload`` may be a '+'-separated mix assigned
     round-robin across CCs."""

@@ -9,7 +9,11 @@ out over a process pool (results are identical to the serial run).
   fig4_top(...) bw x n_mcs x workload     (paper Fig. 4 top)
   fig4_bottom(...) multi-job interference (paper Fig. 4 bottom)
   fig5_scalability(...) n_ccs x scheme x workload-mix (multi-CC contention)
+  fig6_ablation(...) ablation policies x workloads (synergy decomposition)
   paper_claims(...) geomean speedups of daemon over page
+
+Schemes and workloads are registry names (policy.py / trace.py); every
+registered composition is a valid axis value.
 """
 from __future__ import annotations
 
@@ -24,9 +28,11 @@ from repro.core.sim.sweep import (
     run_sweep,
     scheme_ratio,
 )
-from repro.core.sim.trace import WORKLOADS
+from repro.core.sim.trace import DEFAULT_SUITE
 
-DEFAULT_WORKLOADS = tuple(WORKLOADS)
+# the paper's eight-workload suite, pinned explicitly (NOT "every registered
+# workload") so registering a new source never changes the committed grids
+DEFAULT_WORKLOADS = DEFAULT_SUITE
 
 
 def _sweep_kw(kw: dict) -> dict:
@@ -257,6 +263,72 @@ def fig5_scalability(
         rows.append({"workload": "geomean", "n_ccs": n_ccs,
                      "speedup": geomean(ratios)})
     return rows
+
+
+# the fig6 ablation grid: 'page' is the baseline, 'daemon' the full
+# synergy; three ablations remove exactly one technique each (daemon_fifo:
+# partitioning, daemon_fixed_gran: adaptive selection, daemon_nocomp:
+# compression) and both_dualq keeps ONLY decoupled movement + partitioning
+# (no selection unit, no throttle, no compression) — see policy.py
+ABLATION_POLICIES = ("both_dualq", "daemon_fifo", "daemon_fixed_gran",
+                     "daemon_nocomp")
+# the paper suite plus the phase-changing source (where fixed granularity
+# is wrong half the time — the adaptive-selection ablation's stress case)
+ABLATION_WORKLOADS = DEFAULT_SUITE + ("ph",)
+
+
+def fig6_ablation_spec(
+    workloads: Iterable[str] = ABLATION_WORKLOADS,
+    policies: Iterable[str] = ("page",) + ABLATION_POLICIES + ("daemon",),
+    *,
+    cfg: Optional[SimConfig] = None,
+    **kw,
+) -> Sweep:
+    """The canonical ablation grid (DESIGN.md §2.6): policy x workload at
+    the congested end of the paper's network range, where every technique's
+    contribution is visible.  Shared by the API and
+    benchmarks/fig6_ablation.py so the 'fig6_ablation' BENCH_sim.json entry
+    has one meaning."""
+    axes = {"workload": tuple(workloads), "scheme": tuple(policies)}
+    return Sweep(name="fig6_ablation", axes=axes,
+                 base=cfg or SimConfig(link_bw_frac=0.125), **_sweep_kw(kw))
+
+
+def fig6_geomeans(res: SweepResult) -> List[dict]:
+    """Per-policy speedups over 'page' from an executed fig6 grid: one row
+    per non-baseline policy with the geomean across the grid's workloads
+    plus the per-workload ratios.  The single source of the fig6 derived
+    numbers — shared by :func:`fig6_ablation` and
+    benchmarks/fig6_ablation.py so the CI-gated ledger values and the
+    public API cannot diverge."""
+    g = res.grid("workload", "scheme")
+    rows = []
+    for p in res.axes["scheme"]:
+        if p == "page":
+            continue
+        ratios = {
+            w: g[(w, "page")].metrics.cycles / g[(w, p)].metrics.cycles
+            for w in res.axes["workload"]
+        }
+        rows.append({"policy": p, "geomean_vs_page": geomean(ratios.values()),
+                     "per_workload": ratios})
+    return rows
+
+
+def fig6_ablation(
+    workloads: Iterable[str] = ABLATION_WORKLOADS,
+    policies: Iterable[str] = ("page",) + ABLATION_POLICIES + ("daemon",),
+    *,
+    cfg: Optional[SimConfig] = None,
+    workers: Optional[int] = None,
+    **kw,
+) -> List[dict]:
+    """The paper's ablation study: each technique contributes, the synergy
+    dominates.  Per-policy rows carry the geomean speedup over 'page' across
+    the workloads (plus per-workload ratios); every ablation should land
+    strictly between 'page' (1.0) and 'daemon'."""
+    sw = fig6_ablation_spec(workloads, policies, cfg=cfg, **kw)
+    return fig6_geomeans(run_sweep(sw, workers=workers))
 
 
 def paper_claims(

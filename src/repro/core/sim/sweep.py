@@ -33,7 +33,8 @@ from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.sim.config import Metrics, SimConfig
 from repro.core.sim.engine import simulate
-from repro.core.sim.trace import generate
+from repro.core.sim.policy import MovementPolicy, get_policy
+from repro.core.sim.trace import generate, get_workload
 
 BENCH_SCHEMA = "repro.sim.sweep/v1"
 
@@ -49,7 +50,7 @@ RESERVED_AXES = ("scheme", "workload", "seed", "n_jobs")
 
 def run_one(
     workload: str,
-    scheme: str,
+    scheme,
     cfg: Optional[SimConfig] = None,
     *,
     seed: int = 0,
@@ -59,6 +60,10 @@ def run_one(
 ) -> Metrics:
     """One application = cfg.n_cores threads of the workload (multicore CC);
     n_jobs > 1 stacks additional independent applications on the same CC.
+    ``scheme`` is a registered policy name or a
+    :class:`~repro.core.sim.policy.MovementPolicy` instance; ``workload``
+    names registered trace sources (unknown names fail fast listing the
+    registered choices).
 
     With ``cfg.n_ccs > 1`` every CC runs its own full application
     (``n_accesses`` is per CC, so aggregate traffic scales with the CC
@@ -72,8 +77,11 @@ def run_one(
     CC count (e.g. a single workload).  CC 0's trace seeds match the
     single-CC model exactly."""
     cfg = cfg or SimConfig()
+    scheme = get_policy(scheme)  # fail fast on unknown policy names
     n_ccs = max(1, cfg.n_ccs)
     parts = tuple(workload.split("+")) if workload else (workload,)
+    for p in parts:  # fail fast on unknown workload names
+        get_workload(p)
     n_threads = max(1, cfg.n_cores) * max(1, n_jobs)
     per = max(1, n_accesses // n_threads)
     if n_ccs == 1 and len(parts) == 1:
@@ -128,6 +136,17 @@ class Sweep:
                 raise ValueError(
                     f"axis {k!r} must be a sequence of values, not {v!r} "
                     f"(did you mean ({v!r},)?)")
+        # fail fast on unknown policy/workload names (registry lookups list
+        # the available choices), at declaration time rather than mid-sweep
+        for s in self.axes.get("scheme", ()):
+            if isinstance(s, MovementPolicy):
+                raise ValueError(
+                    f"scheme axis values must be registered policy names; "
+                    f"register_policy({s.name!r}) first")
+            get_policy(s)
+        for mix in self.axes.get("workload", ()):
+            for part in mix.split("+"):
+                get_workload(part)
         object.__setattr__(self, "axes", {k: tuple(v) for k, v in self.axes.items()})
 
     def cells(self) -> List[Dict[str, Any]]:

@@ -5,7 +5,14 @@ slowdown grows with the CC count while DaeMon's line latency stays bounded
 behind the reserved line share."""
 import pytest
 
-from repro.core.sim import SimConfig, Sweep, run_one, run_sweep, simulate
+from repro.core.sim import (
+    SimConfig,
+    Sweep,
+    get_policy,
+    run_one,
+    run_sweep,
+    simulate,
+)
 from repro.core.sim.trace import generate
 
 N = 6_000
@@ -64,6 +71,40 @@ GOLD = {
 }
 
 
+# Golden metrics for the multi-CC engine captured BEFORE the policy-registry
+# refactor (run_one("pr+st", s, SimConfig(link_bw_frac=0.25, n_ccs=2),
+# seed=1, n_accesses=6000) at commit 886acec).  The six legacy schemes,
+# re-expressed as registered policy compositions, must reproduce these
+# bit-for-bit too (the n_ccs>1 half of the parity acceptance).
+GOLD_MCC = {
+    "pr+st/local": {"cycles": 54630.0, "net_bytes": 0.0,
+                    "miss_latency_sum": 3595500.0, "pages_moved": 0,
+                    "lines_moved": 0, "local_hits": 11985,
+                    "remote_misses": 0},
+    "pr+st/page": {"cycles": 2189592.0, "net_bytes": 17517120.0,
+                   "miss_latency_sum": 133378600.0, "pages_moved": 4103,
+                   "lines_moved": 0, "local_hits": 5951,
+                   "remote_misses": 6034},
+    "pr+st/page_free": {"cycles": 54630.0, "net_bytes": 637360.0,
+                        "miss_latency_sum": 3595500.0, "pages_moved": 4164,
+                        "lines_moved": 0, "local_hits": 7821,
+                        "remote_misses": 4164},
+    "pr+st/cacheline": {"cycles": 504104.0, "net_bytes": 587440.0,
+                        "miss_latency_sum": 72146666.0, "pages_moved": 0,
+                        "lines_moved": 7343, "local_hits": 0,
+                        "remote_misses": 11985},
+    "pr+st/both": {"cycles": 2237712.0, "net_bytes": 17900800.0,
+                   "miss_latency_sum": 136801648.0, "pages_moved": 4103,
+                   "lines_moved": 4796, "local_hits": 5854,
+                   "remote_misses": 6131},
+    "pr+st/daemon": {"cycles": 500026.1135329509,
+                     "net_bytes": 1674789.362959711,
+                     "miss_latency_sum": 45104614.51773566,
+                     "pages_moved": 749, "lines_moved": 5084,
+                     "local_hits": 5056, "remote_misses": 6929},
+}
+
+
 def test_nccs1_bit_parity_with_legacy_engine():
     """n_ccs=1 reproduces the pre-refactor single-CC metrics bit-for-bit
     across all six schemes (explicit n_ccs=1 and the default both)."""
@@ -75,6 +116,31 @@ def test_nccs1_bit_parity_with_legacy_engine():
             for name, v in exp.items():
                 assert getattr(m, name) == v, (key, name)
             assert m.per_cc == []  # single-CC: the aggregate IS the CC
+
+
+def test_multicc_bit_parity_with_legacy_engine():
+    """n_ccs=2 reproduces the pre-policy-registry multi-CC metrics
+    bit-for-bit across all six schemes."""
+    cfg = SimConfig(link_bw_frac=0.25, n_ccs=2)
+    for key, exp in GOLD_MCC.items():
+        w, s = key.split("/")
+        m = run_one(w, s, cfg, seed=1, n_accesses=N)
+        for name, v in exp.items():
+            assert getattr(m, name) == v, (key, name)
+        assert len(m.per_cc) == 2
+
+
+def test_policy_objects_match_scheme_strings():
+    """A scheme string and its registered MovementPolicy composition are the
+    same simulation: run_one accepts either and produces identical metrics
+    (the composition IS the scheme, not an approximation of it)."""
+    cfg = SimConfig(link_bw_frac=0.25)
+    for key, exp in GOLD.items():
+        w, s = key.split("/")
+        m = run_one(w, get_policy(s), cfg, seed=1, n_accesses=N)
+        for name, v in exp.items():
+            assert getattr(m, name) == v, (key, name)
+        assert m.scheme == s  # metrics keep the registered policy name
 
 
 def test_multicc_trace_group_shape_is_validated():

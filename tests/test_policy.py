@@ -1,0 +1,270 @@
+"""Policy & workload registry tests (DESIGN.md §2.6): registration
+semantics, fail-fast name validation, ablation compositions landing
+strictly between 'page' and 'daemon' (the paper's synergy claim), the new
+trace sources (phase-changing, .npz replay), and Metrics round-trips —
+all without touching `Simulator.miss()` dispatch internals."""
+import numpy as np
+import pytest
+
+from repro.core.sim import (
+    ABLATION_POLICIES,
+    Metrics,
+    MovementPolicy,
+    SimConfig,
+    Sweep,
+    available_policies,
+    available_workloads,
+    generate,
+    geomean,
+    get_policy,
+    get_workload,
+    register_policy,
+    register_trace_file,
+    register_workload,
+    run_one,
+    run_sweep,
+    save_trace,
+    unregister_policy,
+    unregister_workload,
+)
+
+N = 3_000
+
+
+# ---------------- registry behavior ----------------
+
+
+def test_legacy_schemes_are_registered_compositions():
+    assert set(available_policies()) >= {
+        "local", "page", "page_free", "cacheline", "both", "daemon"}
+    d = get_policy("daemon")
+    assert (d.granularity, d.partitioning, d.compression, d.throttle) == \
+        ("adaptive", "dual", "link", True)
+    p = get_policy("page")
+    assert (p.granularity, p.partitioning, p.compression, p.throttle) == \
+        ("page", "fifo", "off", False)
+    assert get_policy("both").page_carries_requests is False
+    assert get_policy("page_free").free_transfers is True
+
+
+def test_duplicate_policy_registration_raises():
+    pol = MovementPolicy(name="dup_test_pol")
+    register_policy(pol)
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            register_policy(pol)
+        register_policy(pol, overwrite=True)  # explicit overwrite is allowed
+    finally:
+        unregister_policy("dup_test_pol")
+
+
+def test_unknown_policy_lists_choices():
+    with pytest.raises(KeyError, match=r"registered policies: .*daemon"):
+        run_one("pr", "no_such_policy", n_accesses=100)
+
+
+def test_unknown_workload_lists_choices():
+    with pytest.raises(KeyError, match=r"registered workloads: .*pr"):
+        run_one("no_such_workload", "daemon", n_accesses=100)
+    # '+' mixes validate every part
+    with pytest.raises(KeyError, match="no_such_workload"):
+        run_one("pr+no_such_workload", "daemon",
+                SimConfig(n_ccs=2), n_accesses=100)
+
+
+def test_sweep_validates_names_at_declaration():
+    with pytest.raises(KeyError, match="registered policies"):
+        Sweep(name="x", axes={"scheme": ("page", "bogus")})
+    with pytest.raises(KeyError, match="registered workloads"):
+        Sweep(name="x", axes={"workload": ("pr+bogus",)})
+
+
+def test_policy_component_validation():
+    with pytest.raises(ValueError, match="granularity"):
+        MovementPolicy(name="bad", granularity="huge")
+    with pytest.raises(ValueError, match="partitioning"):
+        MovementPolicy(name="bad", partitioning="triple")
+    with pytest.raises(ValueError, match="line_share"):
+        MovementPolicy(name="bad", line_share=1.5)
+
+
+def test_duplicate_workload_registration_raises():
+    @register_workload("dup_test_wl")
+    def gen(seed, footprint, n):  # pragma: no cover - never generated
+        raise AssertionError
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            register_workload("dup_test_wl")(gen)
+    finally:
+        unregister_workload("dup_test_wl")
+
+
+def test_simconfig_fails_fast():
+    with pytest.raises(ValueError, match="mc_interleave"):
+        SimConfig(mc_interleave="bogus")
+    with pytest.raises(ValueError, match="n_ccs"):
+        SimConfig(n_ccs=0)
+    with pytest.raises(ValueError, match="line_share"):
+        SimConfig(line_share=0.0)
+    with pytest.raises(ValueError, match="page_bytes"):
+        SimConfig(line_bytes=64, page_bytes=100)
+    with pytest.raises(ValueError, match="bw_jitter"):
+        SimConfig(bw_jitter=1.5)
+
+
+# ---------------- custom registrations, no engine edits ----------------
+
+
+def test_custom_policy_runs_by_name():
+    """A fresh composition registered at runtime is immediately usable by
+    its string name everywhere — the registry IS the dispatch."""
+    register_policy(MovementPolicy(
+        name="tpol_lowshare", granularity="adaptive", partitioning="dual",
+        compression="link", throttle=True, line_share=0.2))
+    try:
+        m = run_one("pr", "tpol_lowshare", SimConfig(link_bw_frac=0.25),
+                    n_accesses=N)
+        assert m.scheme == "tpol_lowshare" and m.cycles > 0
+        # the per-policy line_share override takes effect: a different
+        # bandwidth split is a different simulation
+        d = run_one("pr", "daemon", SimConfig(link_bw_frac=0.25), n_accesses=N)
+        assert m.cycles != d.cycles
+    finally:
+        unregister_policy("tpol_lowshare")
+
+
+def test_custom_workload_runs_by_name_and_in_mixes():
+    @register_workload("twl_stride", compressibility=2.5)
+    def stride(seed, footprint, n):
+        addrs = (np.arange(n, dtype=np.int64) * 192) % footprint
+        return (np.full(n, 20, np.int64), addrs, np.zeros(n, bool))
+    try:
+        m = run_one("twl_stride", "daemon", n_accesses=N)
+        assert m.accesses > 0
+        mix = run_one("twl_stride+pr", "daemon", SimConfig(n_ccs=2),
+                      n_accesses=N)
+        assert [d["workload"] for d in mix.per_cc] == ["twl_stride", "pr"]
+    finally:
+        unregister_workload("twl_stride")
+
+
+# ---------------- ablation compositions (paper synergy) ----------------
+
+
+def test_ablations_land_strictly_between_page_and_daemon():
+    """Each ablated policy removes one technique: every one must beat the
+    page baseline on the geomean yet lose to the full daemon synergy."""
+    cfg = SimConfig(link_bw_frac=0.125)
+    wls = ("pr", "nw", "dr", "ml", "ph")
+    n = 4_000  # >= 1000 accesses/thread so 'ph' actually alternates phases
+    base = {w: run_one(w, "page", cfg, n_accesses=n).cycles for w in wls}
+    gm = {}
+    for p in ABLATION_POLICIES + ("daemon",):
+        gm[p] = geomean(
+            base[w] / run_one(w, p, cfg, n_accesses=n).cycles for w in wls)
+    for p in ABLATION_POLICIES:
+        assert 1.0 < gm[p] < gm["daemon"], (p, gm)
+
+
+def test_nocomp_ablation_disables_compression_only():
+    cfg = SimConfig(link_bw_frac=0.125)
+    full = run_one("pr", "daemon", cfg, n_accesses=N)
+    nocomp = run_one("pr", "daemon_nocomp", cfg, n_accesses=N)
+    assert full.bytes_saved_compression > 0
+    assert nocomp.bytes_saved_compression == 0
+    assert nocomp.net_bytes > full.net_bytes
+
+
+def test_page_dualq_is_a_null_ablation():
+    """Page-granularity traffic on the dual-queue link has no line class to
+    protect — it must match the FIFO page scheme's cycle count closely."""
+    cfg = SimConfig(link_bw_frac=0.25)
+    a = run_one("pr", "page", cfg, n_accesses=N)
+    b = run_one("pr", "page_dualq", cfg, n_accesses=N)
+    assert b.cycles == pytest.approx(a.cycles, rel=1e-6)
+
+
+def test_ablation_policies_in_sweep_axes():
+    sw = Sweep(
+        name="abl",
+        axes={"workload": ("pr",),
+              "scheme": ("page", "daemon_fifo", "daemon")},
+        base=SimConfig(link_bw_frac=0.25),
+        n_accesses=2_000,
+    )
+    res = run_sweep(sw, workers=2)  # registry survives process fan-out
+    g = res.grid("scheme")
+    assert g[("page",)].metrics.cycles > g[("daemon_fifo",)].metrics.cycles \
+        > g[("daemon",)].metrics.cycles * 0.99
+
+
+# ---------------- new trace sources ----------------
+
+
+def test_phase_workload_registered_with_metadata():
+    spec = get_workload("ph")
+    assert spec.compressibility == pytest.approx(2.8)
+    gaps, addrs, writes = generate("ph", n=4_000)
+    assert len(gaps) == len(addrs) == len(writes) == 4_000
+    # both phases present: a sequential lower-half scan and upper-half hops
+    assert addrs.min() < 16 << 19 and addrs.max() > 16 << 19
+
+
+def test_phase_workload_rewards_adaptivity():
+    """On the phase-changing source the fixed-granularity ablation must not
+    beat the adaptive daemon (the phase is what adaptivity tracks)."""
+    cfg = SimConfig(link_bw_frac=0.125)
+    d = run_one("ph", "daemon", cfg, n_accesses=4_000)
+    f = run_one("ph", "daemon_fixed_gran", cfg, n_accesses=4_000)
+    p = run_one("ph", "page", cfg, n_accesses=4_000)
+    assert d.cycles <= f.cycles * 1.01
+    assert d.cycles < p.cycles  # and the phase mix still favors daemon
+
+
+def test_trace_replay_roundtrip(tmp_path):
+    path = str(tmp_path / "cap.npz")
+    save_trace(path, generate("pr", seed=3, n=2_000), compressibility=3.3)
+    spec = register_trace_file(path)
+    assert spec.compressibility == pytest.approx(3.3)
+    assert path in available_workloads()
+    # replay is deterministic and seed-rotated (threads out of phase)
+    g0, a0, w0 = spec.trace(seed=0, n=500)
+    g1, a1, w1 = spec.trace(seed=1, n=500)
+    assert len(a0) == 500 and not np.array_equal(a0, a1)
+    ref = generate("pr", seed=3, n=2_000)
+    assert np.array_equal(a0, ref[1][:500])
+    m = run_one(path, "daemon", n_accesses=N)
+    assert m.remote_misses > 0
+
+
+def test_trace_replay_auto_registers_by_path_and_in_mixes(tmp_path):
+    path = str(tmp_path / "auto.npz")
+    save_trace(path, generate("st", seed=0, n=2_000))
+    # never explicitly registered: the .npz suffix auto-registers on lookup
+    m = run_one("pr+" + path, "daemon", SimConfig(n_ccs=2), n_accesses=N)
+    assert [d["workload"] for d in m.per_cc] == ["pr", path]
+    with pytest.raises(FileNotFoundError):
+        get_workload(str(tmp_path / "missing.npz"))
+
+
+# ---------------- Metrics round-trip ----------------
+
+
+def test_metrics_roundtrip_with_per_cc():
+    m = run_one("pr+st", "daemon", SimConfig(n_ccs=2, link_bw_frac=0.25),
+                n_accesses=2_000)
+    assert len(m.per_cc) == 2  # non-empty rollup
+    d = m.as_dict()
+    back = Metrics.from_dict(d)
+    assert back.as_dict() == d
+    assert back.per_cc == m.per_cc
+    assert back.avg_access_cost == pytest.approx(m.avg_access_cost)
+
+
+def test_metrics_roundtrip_ignores_derived_keys():
+    m = run_one("st", "page", n_accesses=1_000)
+    d = m.as_dict()
+    d["avg_access_cost"] = -123.0  # derived: must be ignored on the way in
+    back = Metrics.from_dict(d)
+    assert back.avg_access_cost == m.avg_access_cost
+    assert back.per_cc == []
