@@ -6,7 +6,7 @@ tolerance (default 5%).  The committed BENCH_sim.json is the output of the
 exact CI command::
 
     PYTHONPATH=src python benchmarks/run.py --quick \
-        --only fig2,fig4_top,fig4_bottom,sweep_jitter,sweep_nmcs,fig5,fig6
+        --only fig2,fig4_top,fig4_bottom,sweep_jitter,sweep_nmcs,fig5,fig6,fig7
 
 so CI can regenerate it deterministically and fail the workflow when a
 code change moves any geomean by more than the tolerance — in EITHER
@@ -76,7 +76,12 @@ def compare(baseline: dict, fresh: dict, tol: float,
                     yield (name, key, bd[key], None, 0.0, "missing-key")
                     continue
                 base, new = float(bd[key]), float(fd[key])
-                rel = (new - base) / abs(base) if base else float("inf")
+                if base:
+                    rel = (new - base) / abs(base)
+                elif new == 0.0:
+                    rel = 0.0  # both zero: a match, not a div-by-zero blowup
+                else:
+                    rel = float("inf")
                 yield (name, key, base, new,
                        rel, "ok" if abs(rel) <= tol else "regression")
 

@@ -1,0 +1,71 @@
+"""Uplink contention (DESIGN.md §2.7): daemon vs the page scheme as the
+CC->MC uplink tightens relative to the downlink.
+
+With ``SimConfig.uplink_bw`` set, line/page request packets and dirty-page
+writebacks queue on a per-MC contended uplink instead of being folded into
+``net_lat`` / injected into the downlink.  Baselines run a FIFO uplink —
+their request packets suffer head-of-line blocking behind 4 KiB writebacks
+— while daemon's dual-queue uplink keeps request packets on a protected
+class (``1 - writeback_share`` of the bandwidth) and compresses writebacks
+off the uplink backlog.
+
+One declarative Sweep over write-heavy workload x uplink_bw x n_ccs x
+scheme; the per-uplink_bw daemon-vs-page geomeans merge into BENCH_sim.json
+(docs/SWEEPS.md) and are gated in CI by check_bench.py.  The headline:
+the geomean *increases* as ``uplink_bw`` drops from 1.0x to 0.25x of
+``link_bw`` — bandwidth asymmetry makes the reverse path first-order.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core.sim import (
+    default_workers,
+    fig7_uplink_spec,
+    run_sweep,
+    scheme_geomean,
+    scheme_ratio,
+    write_bench,
+)
+
+from benchmarks import BENCH_PATH
+
+
+def run(n_accesses: int = 15_000, workers: int | None = None,
+        bench_path: str = BENCH_PATH):
+    workers = default_workers() if workers is None else workers
+    sw = fig7_uplink_spec(n_accesses=n_accesses)
+    res = run_sweep(sw, workers=workers)
+    per_call = res.us_per_call  # per-cell sim cost, worker-count independent
+    rows, derived = [], {}
+    for ub in sw.axes["uplink_bw"]:
+        sub = res.filter(uplink_bw=ub)
+        g = scheme_geomean(sub)
+        derived[f"daemon_vs_page_geomean@uplink_bw={ub}"] = g
+        rows.append((f"fig7/uplink_bw{ub}/geomean_daemon_vs_page", per_call,
+                     f"speedup={g:.3f}"))
+        for key, ratio in sorted(scheme_ratio(sub).items()):
+            k = dict(key)
+            rows.append((f"fig7/{k['workload']}/uplink_bw{ub}/"
+                         f"n_ccs{k['n_ccs']}", per_call,
+                         f"speedup={ratio:.3f}"))
+    write_bench(bench_path, res, derived=derived)
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--n-accesses", type=int, default=15_000)
+    args = ap.parse_args()
+    for tag, us, derived in run(args.n_accesses, args.workers):
+        print(f"{tag},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

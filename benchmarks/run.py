@@ -24,7 +24,7 @@ def list_registries(section_names) -> None:
         get_workload,
     )
 
-    print("policies (name: granularity/partitioning/compression"
+    print("policies (name: granularity/partitioning/up-uplink/compression"
           "/throttle[/flags]):")
     for name in available_policies():
         p = get_policy(name)
@@ -35,7 +35,8 @@ def list_registries(section_names) -> None:
             flags.append("race")
         if p.line_share is not None:
             flags.append(f"line_share={p.line_share}")
-        comp = "/".join([p.granularity, p.partitioning, p.compression,
+        comp = "/".join([p.granularity, p.partitioning,
+                         f"up-{p.uplink_partitioning}", p.compression,
                          "throttle" if p.throttle else "nothrottle"]
                         + flags)
         print(f"  {name:18s} {comp:44s} {p.description}")
@@ -57,6 +58,7 @@ def main() -> None:
         fig4_robustness,
         fig5_scalability,
         fig6_ablation,
+        fig7_uplink,
         roofline,
     )
 
@@ -76,6 +78,9 @@ def main() -> None:
     # fig6 needs >= 1000 accesses/thread so the 'ph' workload actually
     # alternates phases (epoch = 500 accesses)
     n_fig6 = 4_000 if args.quick else 20_000
+    # fig7 needs >= 1000 accesses/thread so the 'wh' workload actually
+    # churns its local page cache (writebacks are the traffic under test)
+    n_fig7 = 4_000 if args.quick else 20_000
     w = args.workers
     sections = [
         ("fig2", lambda: fig2_schemes.run(n_accesses=n_fig2, workers=w)),
@@ -85,6 +90,7 @@ def main() -> None:
         ("sweep_nmcs", lambda: fig4_robustness.run_nmcs(n_accesses=n_fig4, workers=w)),
         ("fig5", lambda: fig5_scalability.run(n_accesses=n_fig4, workers=w)),
         ("fig6", lambda: fig6_ablation.run(n_accesses=n_fig6, workers=w)),
+        ("fig7", lambda: fig7_uplink.run(n_accesses=n_fig7, workers=w)),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]

@@ -7,6 +7,7 @@ page movements may be link-compressed.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
+from typing import Optional
 
 # The paper's six schemes, in figure order.  Since the policy registry
 # (policy.py) these are just the six legacy *registered compositions*;
@@ -49,6 +50,20 @@ class SimConfig:
     #   "single" — all traffic on MC 0 (degenerate shared-FIFO baseline)
     mc_interleave: str = "page"
 
+    # CC->MC uplink (§2.7 of DESIGN.md).  ``None`` (default) is the legacy
+    # model: the request path is folded into ``net_lat`` and dirty-page
+    # writebacks are injected into the *downlink* queue — bit-identical to
+    # every committed golden.  A float (bytes/cycle) makes the reverse path
+    # a first-class contended resource: line/page request packets
+    # (``header_bytes`` each) and writebacks queue on a per-MC uplink whose
+    # arbitration follows the policy's ``uplink`` component.  Disaggregated
+    # fabrics are commonly asymmetric (uplink_bw < link_bw).
+    uplink_bw: Optional[float] = None
+    # dual-queue uplinks: bandwidth fraction of the writeback (bulk) class
+    # when both classes are backlogged; request packets keep the rest
+    # (mirrors line_share on the downlink).
+    writeback_share: float = 0.4
+
     # scenario axis: time-varying network (§5 of DESIGN.md).  Models fabric
     # congestion: each link resamples per ``jitter_period`` cycles an
     # *available*-bandwidth multiplier 1 - bw_jitter*U[0,1) (floored at 0.05;
@@ -88,6 +103,13 @@ class SimConfig:
                 raise ValueError(f"{name}={getattr(self, name)} must be > 0")
         if not (0.0 < self.line_share < 1.0):
             raise ValueError(f"line_share={self.line_share} must be in (0, 1)")
+        if self.uplink_bw is not None and self.uplink_bw <= 0:
+            raise ValueError(
+                f"uplink_bw={self.uplink_bw} must be > 0 (or None for the "
+                f"legacy folded-into-net_lat model)")
+        if not (0.0 < self.writeback_share < 1.0):
+            raise ValueError(
+                f"writeback_share={self.writeback_share} must be in (0, 1)")
         for name in ("bw_jitter", "lat_jitter"):
             if not (0.0 <= getattr(self, name) <= 1.0):
                 raise ValueError(
@@ -111,11 +133,17 @@ class Metrics:
     local_hits: int = 0
     remote_misses: int = 0
     miss_latency_sum: float = 0.0  # total cycles spent servicing LLC misses
-    net_bytes: float = 0.0  # bytes transmitted over the network
+    net_bytes: float = 0.0  # bytes transmitted MC->CC (downlink; with the
+    # legacy uplink_bw=None model this also includes writeback bytes)
+    uplink_bytes: float = 0.0  # bytes transmitted CC->MC (request packets +
+    # writebacks); always 0 under the legacy uplink_bw=None model
     pages_moved: int = 0
     lines_moved: int = 0
+    writebacks: int = 0  # dirty-page evictions written back to the MC
     bytes_saved_compression: float = 0.0
-    stall_cycles: float = 0.0
+    # count of stall *episodes* (each time a core's mlp window fills), NOT
+    # stalled cycles — see DESIGN.md §2.2
+    stall_episodes: float = 0.0
     # multi-CC rollup (§2.5): one entry per CC (cc index, per-CC workload,
     # and the full per-CC counter set); empty for single-CC runs, where the
     # aggregate IS the (only) CC's metrics.
@@ -139,13 +167,15 @@ class Metrics:
             "avg_access_cost": self.avg_access_cost,
             "accesses": self.accesses,
             "net_bytes": self.net_bytes,
+            "uplink_bytes": self.uplink_bytes,
             "pages_moved": self.pages_moved,
             "lines_moved": self.lines_moved,
+            "writebacks": self.writebacks,
             "llc_hits": self.llc_hits,
             "local_hits": self.local_hits,
             "remote_misses": self.remote_misses,
             "miss_latency_sum": self.miss_latency_sum,
-            "stall_cycles": self.stall_cycles,
+            "stall_episodes": self.stall_episodes,
             "bytes_saved_compression": self.bytes_saved_compression,
             "per_cc": self.per_cc,
         }

@@ -24,6 +24,16 @@ page cache and (for daemon) its own engines, contend for the SAME per-MC
 downlinks through per-CC flow arbitration (DESIGN.md §2.5).  ``n_ccs=1``
 keeps the legacy single-CC links and reproduces the legacy model
 bit-for-bit.
+
+With ``SimConfig.uplink_bw`` set, the CC->MC direction becomes a
+first-class contended resource too (DESIGN.md §2.7): line/page request
+packets (~``header_bytes`` each) and dirty-page writebacks queue on a
+per-MC *uplink* built from the same link machinery, arbitrated per the
+policy's ``uplink`` component ('line' class = request packets, 'page'
+class = writeback bulk), and CC-side writeback compression keys off the
+uplink backlog.  ``uplink_bw=None`` (default) is the legacy model —
+requests folded into ``net_lat``, writebacks injected into the downlink —
+bit-identical to every committed golden.
 """
 from __future__ import annotations
 
@@ -189,6 +199,11 @@ class FifoLink:
         self.bytes += size
         self.eng.at(done, cb)
 
+    def backlog(self, t: float) -> float:
+        """Outstanding bytes not yet transmitted (congestion signal,
+        DESIGN.md §2.7): residual busy time x nominal bandwidth."""
+        return max(0.0, self.busy_until - t) * self.bw
+
 
 class DualQueueLink:
     """DaeMon's decoupled queues: fluid bandwidth partition between the
@@ -309,6 +324,13 @@ class DualQueueLink:
             self.head_rem[cls] = size
             self.cb[cls] = cb
         self._schedule(t)
+
+    def backlog(self, t: float) -> float:
+        """Outstanding bytes across both classes (congestion signal,
+        DESIGN.md §2.7).  ``head_rem`` is exact as of the last ``_advance``;
+        staleness only overstates the backlog, which is safe for a trigger."""
+        q = sum(sz for d in self.q.values() for sz, _ in d)
+        return q + sum(max(0.0, r) for r in self.head_rem.values())
 
 
 class SharedLink:
@@ -440,6 +462,11 @@ class SharedLink:
             self.cb[c] = cb
         self._schedule(t)
 
+    def backlog(self, t: float) -> float:
+        """Outstanding bytes across all lanes (congestion signal, §2.7)."""
+        q = sum(sz for d in self.q.values() for sz, _ in d)
+        return q + sum(max(0.0, r) for r in self.head_rem.values())
+
 
 class SharedFifoLink(SharedLink):
     """Baseline MC downlink shared by ``n_flows`` CCs: one store-and-forward
@@ -540,6 +567,10 @@ class CCState:
     local: LRU
     m: Metrics
     comp_base: float
+    # per-CC compression-ratio RNG: each CC's (de)compression engine samples
+    # its own stream, so the draw count of one CC (or scheme) cannot perturb
+    # another CC's ratios through global event order
+    rng: Optional[np.random.Generator] = None
     pending_lines: Dict[int, List[Request]] = field(default_factory=dict)
     pending_pages: Dict[int, List[Request]] = field(default_factory=dict)
     retry: deque = field(default_factory=deque)
@@ -561,7 +592,6 @@ class Simulator:
         self.scheme = self.policy.name
         self.workload = workload
         self.eng = Engine()
-        self.rng = np.random.default_rng(seed + 17)
         self.m = Metrics(scheme=self.scheme, workload=workload)
 
         # traces: List[Trace] (legacy, one CC) or List[List[Trace]] (one
@@ -598,9 +628,14 @@ class Simulator:
             # multi-CC keeps per-CC metrics and rolls them up in run()
             m = self.m if len(cc_traces) == 1 else Metrics(scheme=self.scheme,
                                                            workload=w)
+            # CC 0 keeps the legacy RNG stream (single-CC bit-parity); CC
+            # i>0 gets an independent stream keyed by (seed, idx) so ratios
+            # are a function of the CC's own draw count only
             self.ccs.append(CCState(
                 idx=i, workload=w, cores=cores, local=local, m=m,
                 comp_base=compressibility_of(w if len(parts) > 1 else workload),
+                rng=(np.random.default_rng(seed + 17) if i == 0
+                     else np.random.default_rng((seed + 17, i))),
             ))
         self.cores = [c for cc in self.ccs for c in cc.cores]
         n_ccs = len(self.ccs)
@@ -612,7 +647,8 @@ class Simulator:
                          seed=cfg.jitter_seed * 1000 + i)
             for i in range(cfg.n_mcs)
         ]
-        # per-MC links (downlink data path; request path folded into net_lat).
+        # per-MC links (downlink data path; the request path is folded into
+        # net_lat unless cfg.uplink_bw enables the explicit uplink below).
         # Single-CC systems keep the legacy link classes (bit-identical);
         # multi-CC systems share each MC downlink across per-CC flows.  The
         # policy's partitioning component picks the arbitration.
@@ -632,6 +668,30 @@ class Simulator:
                 else (lambda s: SharedFifoLink(self.eng, cfg.link_bw, n_ccs, s))
             )
         self.links = [mk(s) for s in self.scheds]
+
+        # per-MC CC->MC uplinks (§2.7): request packets ('line' class) +
+        # writeback bulk ('page' class), arbitrated per the policy's uplink
+        # component; both directions see the same per-MC network weather.
+        # None keeps the legacy folded-into-net_lat model bit-for-bit.
+        if cfg.uplink_bw is None:
+            self.uplinks = None
+        else:
+            ubw = cfg.uplink_bw
+            req_share = 1.0 - cfg.writeback_share
+            if self.policy.uplink_partitioning == "dual":
+                mku = (
+                    (lambda s: DualQueueLink(self.eng, ubw, req_share, s))
+                    if n_ccs == 1
+                    else (lambda s: SharedDualQueueLink(
+                        self.eng, ubw, req_share, n_ccs, s))
+                )
+            else:
+                mku = (
+                    (lambda s: FifoLink(self.eng, ubw, s))
+                    if n_ccs == 1
+                    else (lambda s: SharedFifoLink(self.eng, ubw, n_ccs, s))
+                )
+            self.uplinks = [mku(s) for s in self.scheds]
 
     # ---------------- address helpers ----------------
     def page_of(self, line: int) -> int:
@@ -659,7 +719,7 @@ class Simulator:
 
     def comp_ratio(self, cc: CCState) -> float:
         base = cc.comp_base
-        return max(1.0, self.rng.normal(base, 0.15 * base))
+        return max(1.0, cc.rng.normal(base, 0.15 * base))
 
     # ---------------- core execution ----------------
     def start(self):
@@ -679,7 +739,7 @@ class Simulator:
             if len(core.outstanding) >= cfg.mlp:
                 core.stalled = True
                 core.t = t
-                cc.m.stall_cycles += 1  # counted per stall episode
+                cc.m.stall_episodes += 1  # one per mlp-window fill, not per cycle
                 return  # resumed by completion of the oldest request
             line = int(core.addrs[core.idx])
             wr = bool(core.writes[core.idx])
@@ -711,7 +771,7 @@ class Simulator:
     def _insert_page(self, cc: CCState, page: int, t: float):
         ev = cc.local.insert(page)
         if ev is not None and ev[1]:  # dirty eviction -> writeback
-            self._send_page(cc, ev[0], t, writeback=True)
+            self._send_writeback(cc, ev[0], t)
 
     # ---------------- miss handling per policy ----------------
     def _local_hit(self, cc: CCState, core: Core, line: int, wr: bool, t: float) -> None:
@@ -772,6 +832,29 @@ class Simulator:
         return req
 
     # ---------------- transfers ----------------
+    def _request_flight(self, cc: CCState, mc: int, t: float, extra: float,
+                        then: Callable[[float], None]):
+        """CC->MC request flight: run ``then`` when the request packet has
+        reached MC ``mc`` and its DRAM read (+ ``extra``, e.g. compression
+        pipeline fill) has completed.
+
+        Legacy (``uplink_bw=None``): a pure latency — ``net_lat`` +
+        ``remote_mem_lat`` — exactly the folded request path.  Uplink model
+        (§2.7): the ~``header_bytes`` packet first queues on the contended
+        CC->MC uplink's protected 'line' class, then flies."""
+        cfg = self.cfg
+        if self.uplinks is None:
+            self.eng.at(t + self.net_lat(mc, t) + cfg.remote_mem_lat + extra,
+                        then)
+            return
+        cc.m.uplink_bytes += cfg.header_bytes
+
+        def on_up_done(tt: float):
+            self.eng.at(tt + self.net_lat(mc, tt) + cfg.remote_mem_lat + extra,
+                        then)
+
+        self.uplinks[mc].send(t, cfg.header_bytes, on_up_done, "line", cc.idx)
+
     def _fetch_line(self, cc: CCState, line: int, t: float,
                     req: Optional[Request] = None):
         """Line fetch: request flight + MC read + downlink queue + flight."""
@@ -787,17 +870,19 @@ class Simulator:
         mc = self.mc_of(page)
         link = self.links[mc]
         size = cfg.line_bytes + cfg.header_bytes
-        depart_mc = t + self.net_lat(mc, t) + cfg.remote_mem_lat
 
         def on_tx_done(tt: float):
             arrive = tt + self.net_lat(mc, tt)
             self.eng.at(arrive, lambda a: self._on_line_arrival(cc, line, a))
 
-        self.eng.at(depart_mc,
-                    lambda tt: link.send(tt, size, on_tx_done, "line", cc.idx))
+        self._request_flight(
+            cc, mc, t, 0.0,
+            lambda tt: link.send(tt, size, on_tx_done, "line", cc.idx))
         cc.m.net_bytes += size
 
-    def _send_page(self, cc: CCState, page: int, t: float, writeback: bool = False):
+    def _send_page(self, cc: CCState, page: int, t: float):
+        """Demand page migration MC->CC: request flight + MC read +
+        downlink queue + flight (+ compression pipeline at either end)."""
         cfg = self.cfg
         mc = self.mc_of(page)
         link = self.links[mc]
@@ -816,20 +901,56 @@ class Simulator:
             extra = cfg.comp_lat / 4
             cc.m.bytes_saved_compression += raw - size
         cc.m.net_bytes += size
-        if writeback:
-            depart = t + extra  # compressed at the CC, then uplink (modeled on link)
-            self.eng.at(depart,
-                        lambda tt: link.send(tt, size, lambda a: None, "page", cc.idx))
-            return
         cc.m.pages_moved += 1
-        depart_mc = t + self.net_lat(mc, t) + cfg.remote_mem_lat + extra
 
         def on_tx_done(tt: float):
             arrive = tt + self.net_lat(mc, tt) + (cfg.decomp_lat / 4 if extra else 0.0)
             self.eng.at(arrive, lambda a: self._on_page_arrival(cc, page, a))
 
-        self.eng.at(depart_mc,
-                    lambda tt: link.send(tt, size, on_tx_done, "page", cc.idx))
+        self._request_flight(
+            cc, mc, t, extra,
+            lambda tt: link.send(tt, size, on_tx_done, "page", cc.idx))
+
+    def _send_writeback(self, cc: CCState, page: int, t: float):
+        """Dirty-page eviction written back CC->MC.
+
+        Legacy (``uplink_bw=None``): the reverse path is not modeled, so the
+        writeback is injected into the *downlink* queue (stealing bandwidth
+        from demand traffic) and counted as downlink bytes — preserved
+        bit-for-bit for golden parity.  Uplink model (§2.7): the writeback
+        queues on the CC->MC uplink's bulk 'page' class, counted as uplink
+        bytes, and CC-side writeback compression keys off the *uplink
+        backlog* (the congestion it actually contends with) instead of the
+        downlink inflight-page-buffer signal."""
+        cfg = self.cfg
+        mc = self.mc_of(page)
+        raw = cfg.page_bytes + cfg.header_bytes
+        size = raw
+        extra = 0.0
+        cc.m.writebacks += 1
+        compress = self.policy.compression != "off" and cfg.compress
+        if self.uplinks is None:
+            link = self.links[mc]
+            _, pu = self._buf_utils(cc)
+            if compress and pu > self.PAGE_FAST:
+                ratio = self.comp_ratio(cc)
+                size = cfg.page_bytes / ratio + cfg.header_bytes
+                extra = cfg.comp_lat / 4
+                cc.m.bytes_saved_compression += raw - size
+            cc.m.net_bytes += size
+            depart = t + extra  # compressed at the CC, then "sent back" on the downlink
+            self.eng.at(depart,
+                        lambda tt: link.send(tt, size, lambda a: None, "page", cc.idx))
+            return
+        up = self.uplinks[mc]
+        if compress and up.backlog(t) > cfg.page_bytes:
+            ratio = self.comp_ratio(cc)
+            size = cfg.page_bytes / ratio + cfg.header_bytes
+            extra = cfg.comp_lat / 4
+            cc.m.bytes_saved_compression += raw - size
+        cc.m.uplink_bytes += size
+        self.eng.at(t + extra,
+                    lambda tt: up.send(tt, size, lambda a: None, "page", cc.idx))
 
     # ---------------- arrivals ----------------
     def _on_line_arrival(self, cc: CCState, line: int, t: float):
@@ -926,14 +1047,14 @@ class Simulator:
         link = self.links[mc]
         size = cfg.line_bytes + cfg.header_bytes
         cc.m.net_bytes += size
-        depart_mc = t + self.net_lat(mc, t) + cfg.remote_mem_lat
 
         def on_tx_done(tt: float):
             arrive = tt + self.net_lat(mc, tt)
             self.eng.at(arrive, lambda a: self._on_line_arrival(cc, line, a))
 
-        self.eng.at(depart_mc,
-                    lambda tt: link.send(tt, size, on_tx_done, "line", cc.idx))
+        self._request_flight(
+            cc, mc, t, 0.0,
+            lambda tt: link.send(tt, size, on_tx_done, "line", cc.idx))
 
     def _drain_retry(self, cc: CCState, t: float):
         n = len(cc.retry)
@@ -975,10 +1096,12 @@ class Simulator:
             m.remote_misses += cc.m.remote_misses
             m.miss_latency_sum += cc.m.miss_latency_sum
             m.net_bytes += cc.m.net_bytes
+            m.uplink_bytes += cc.m.uplink_bytes
             m.pages_moved += cc.m.pages_moved
             m.lines_moved += cc.m.lines_moved
+            m.writebacks += cc.m.writebacks
             m.bytes_saved_compression += cc.m.bytes_saved_compression
-            m.stall_cycles += cc.m.stall_cycles
+            m.stall_episodes += cc.m.stall_episodes
             d = cc.m.as_dict()
             d.pop("per_cc")
             d["cc"] = cc.idx

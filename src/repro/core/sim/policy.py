@@ -30,6 +30,7 @@ from typing import Callable, Dict, Optional, Tuple, Union
 GRANULARITIES = ("none", "line", "page", "both", "adaptive")
 PARTITIONINGS = ("fifo", "dual")
 COMPRESSIONS = ("off", "link")
+UPLINKS = (None, "fifo", "dual")
 
 
 @dataclass(frozen=True)
@@ -47,6 +48,13 @@ class MovementPolicy:
         ``fifo``      one store-and-forward queue, transfers serialize;
         ``dual``      decoupled queues, the line class keeps ``line_share``
                       of the bandwidth whenever it is backlogged.
+    uplink — how the CC->MC uplink (active only when ``SimConfig.uplink_bw``
+        is set; DESIGN.md §2.7) arbitrates request packets vs writeback
+        bulk: ``fifo`` (requests suffer head-of-line blocking behind 4 KiB
+        writebacks), ``dual`` (requests keep ``1 - writeback_share`` of the
+        uplink whenever backlogged), or ``None`` (default) to follow the
+        ``partitioning`` component — daemon protects its request packets,
+        FIFO baselines do not.
     compression — ``off`` or ``link``: congestion-triggered page
         compression at the MC (per-workload ratios; paper §3-III).
         ``link`` still honors the global ``SimConfig.compress`` switch.
@@ -66,6 +74,7 @@ class MovementPolicy:
     name: str
     granularity: str = "adaptive"
     partitioning: str = "dual"
+    uplink: Optional[str] = None
     compression: str = "link"
     throttle: bool = True
     free_transfers: bool = False
@@ -84,6 +93,10 @@ class MovementPolicy:
             raise ValueError(
                 f"policy {self.name!r}: partitioning={self.partitioning!r} "
                 f"not in {PARTITIONINGS}")
+        if self.uplink not in UPLINKS:
+            raise ValueError(
+                f"policy {self.name!r}: uplink={self.uplink!r} "
+                f"not in {UPLINKS}")
         if self.compression not in COMPRESSIONS:
             raise ValueError(
                 f"policy {self.name!r}: compression={self.compression!r} "
@@ -105,6 +118,12 @@ class MovementPolicy:
     def moves_pages(self) -> bool:
         return self.granularity in ("page", "both", "adaptive")
 
+    @property
+    def uplink_partitioning(self) -> str:
+        """The resolved uplink arbitration: explicit ``uplink``, else the
+        downlink ``partitioning`` component."""
+        return self.uplink if self.uplink is not None else self.partitioning
+
     def with_(self, **kw) -> "MovementPolicy":
         """Derive a variant (give it a new ``name`` before registering)."""
         return replace(self, **kw)
@@ -114,6 +133,7 @@ class MovementPolicy:
         return {
             "granularity": self.granularity,
             "partitioning": self.partitioning,
+            "uplink": self.uplink_partitioning,
             "compression": self.compression,
             "throttle": self.throttle,
             "free_transfers": self.free_transfers,

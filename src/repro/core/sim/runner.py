@@ -10,6 +10,7 @@ out over a process pool (results are identical to the serial run).
   fig4_bottom(...) multi-job interference (paper Fig. 4 bottom)
   fig5_scalability(...) n_ccs x scheme x workload-mix (multi-CC contention)
   fig6_ablation(...) ablation policies x workloads (synergy decomposition)
+  fig7_uplink(...) uplink_bw x write-heavy workload x n_ccs (uplink contention)
   paper_claims(...) geomean speedups of daemon over page
 
 Schemes and workloads are registry names (policy.py / trace.py); every
@@ -329,6 +330,80 @@ def fig6_ablation(
     strictly between 'page' (1.0) and 'daemon'."""
     sw = fig6_ablation_spec(workloads, policies, cfg=cfg, **kw)
     return fig6_geomeans(run_sweep(sw, workers=workers))
+
+
+# the fig7 uplink grid (DESIGN.md §2.7): write-heavy workloads — sources
+# whose migrated pages go back dirty, so the CC->MC reverse path actually
+# carries writeback bulk ('wh' is the dedicated stress source)
+UPLINK_WORKLOADS = ("wh", "st", "pf")
+# uplink capacity as a fraction of the downlink: 1.0 = symmetric,
+# 0.25 = the strongly-asymmetric fabrics the sweep is about
+UPLINK_FRACS = (0.25, 0.5, 1.0)
+
+
+def fig7_uplink_spec(
+    workloads: Iterable[str] = UPLINK_WORKLOADS,
+    uplink_fracs: Iterable[float] = UPLINK_FRACS,
+    n_ccs_list: Iterable[int] = (1, 4),
+    *,
+    cfg: Optional[SimConfig] = None,
+    **kw,
+) -> Sweep:
+    """The canonical uplink-contention grid (DESIGN.md §2.7): uplink/downlink
+    asymmetry x write-heavy workload x CC count, page vs daemon.  The
+    ``uplink_bw`` axis is absolute bytes/cycle derived from ``uplink_fracs``
+    x the base config's ``link_bw``.  Shared by the API and
+    benchmarks/fig7_uplink.py so the 'fig7_uplink' BENCH_sim.json entry has
+    one meaning."""
+    base = cfg or SimConfig()
+    axes = {
+        "workload": tuple(workloads),
+        "uplink_bw": tuple(base.link_bw * f for f in uplink_fracs),
+        "n_ccs": tuple(n_ccs_list),
+        "scheme": ("page", "daemon"),
+    }
+    return Sweep(name="fig7_uplink", axes=axes, base=base, **_sweep_kw(kw))
+
+
+def fig7_uplink(
+    workloads: Iterable[str] = UPLINK_WORKLOADS,
+    uplink_fracs: Iterable[float] = UPLINK_FRACS,
+    n_ccs_list: Iterable[int] = (1, 4),
+    *,
+    cfg: Optional[SimConfig] = None,
+    workers: Optional[int] = None,
+    **kw,
+) -> List[dict]:
+    """Daemon-vs-page speedup as the uplink tightens: per (workload, n_ccs,
+    uplink_bw) rows plus the per-uplink_bw geomean.  The paper's
+    bandwidth-partitioning argument extended to the reverse path: under a
+    FIFO uplink the page scheme's request packets queue behind 4 KiB
+    writebacks, so daemon's advantage grows as ``uplink_bw`` drops."""
+    sw = fig7_uplink_spec(workloads, uplink_fracs, n_ccs_list, cfg=cfg, **kw)
+    res = run_sweep(sw, workers=workers)
+    g = res.grid("workload", "uplink_bw", "n_ccs", "scheme")
+    rows = []
+    for ub in sw.axes["uplink_bw"]:
+        ratios = []
+        for w in sw.axes["workload"]:
+            for n_ccs in sw.axes["n_ccs"]:
+                mp = g[(w, ub, n_ccs, "page")].metrics
+                md = g[(w, ub, n_ccs, "daemon")].metrics
+                ratios.append(mp.cycles / md.cycles)
+                rows.append(
+                    {
+                        "workload": w,
+                        "uplink_bw": ub,
+                        "n_ccs": n_ccs,
+                        "speedup": mp.cycles / md.cycles,
+                        "wb_page": mp.writebacks,
+                        "uplink_bytes_ratio":
+                            mp.uplink_bytes / max(md.uplink_bytes, 1e-9),
+                    }
+                )
+        rows.append({"workload": "geomean", "uplink_bw": ub,
+                     "speedup": geomean(ratios)})
+    return rows
 
 
 def paper_claims(

@@ -325,6 +325,23 @@ def pf(seed: int, footprint: int, n: int) -> Trace:
     return _mk(gaps, addrs, writes, footprint)
 
 
+@register_workload("wh", compressibility=3.2)
+def write_heavy(seed: int, footprint: int, n: int) -> Trace:
+    """wh (log-structured update): a circular read-modify-write sweep
+    (~60% stores) over a working span ~5x the local page cache, so resident
+    pages are re-dirtied line by line and every eviction is a writeback —
+    the reverse CC->MC path carries roughly one dirty page per demand page
+    (the uplink stress case, DESIGN.md §2.7).  The span scales with the
+    trace length (floored at 16 pages) so the churn ratio — not the byte
+    count — is what the workload pins across quick/full grid sizes."""
+    rng = np.random.default_rng(seed)
+    span = min(footprint, max(1024 * 64, n * 64))
+    addrs = (np.arange(n, dtype=np.int64) * 64) % span
+    gaps = rng.integers(8, 20, n)
+    writes = rng.random(n) < 0.6
+    return _mk(gaps, addrs, writes, footprint)
+
+
 @register_workload("ph", compressibility=2.8)
 def phased(seed: int, footprint: int, n: int) -> Trace:
     """ph: phase-changing — alternating streaming-scan and pointer-chase

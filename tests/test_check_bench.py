@@ -1,0 +1,76 @@
+"""Unit tests for the benchmark-regression gate's compare path
+(benchmarks/check_bench.py) — pure-dict ledgers, no simulation."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.check_bench import compare
+
+
+def _section(derived, axes=None, spec=None):
+    return {"axes": axes or {"scheme": ["page", "daemon"]},
+            "spec": spec or {"n_accesses": 1000},
+            "derived": derived}
+
+
+def _statuses(baseline, fresh, tol=0.05, sections=None):
+    return {(name, key): (base, new, rel, status)
+            for name, key, base, new, rel, status
+            in compare(baseline, fresh, tol, sections)}
+
+
+def test_matching_geomeans_are_ok():
+    b = {"fig": _section({"daemon_vs_page_geomean": 3.0})}
+    f = {"fig": _section({"daemon_vs_page_geomean": 3.1})}
+    (_, _, rel, status) = _statuses(b, f)[("fig", "daemon_vs_page_geomean")]
+    assert status == "ok" and abs(rel - (0.1 / 3.0)) < 1e-12
+
+
+def test_drift_beyond_tolerance_is_regression():
+    b = {"fig": _section({"daemon_vs_page_geomean": 3.0})}
+    f = {"fig": _section({"daemon_vs_page_geomean": 4.0})}
+    assert _statuses(b, f)[("fig", "daemon_vs_page_geomean")][3] == "regression"
+
+
+def test_both_zero_is_ok_not_inf():
+    """base == new == 0 must compare as rel = 0.0 / 'ok' — the legacy
+    base-falsy branch produced rel = inf and flagged a perfect match as a
+    regression."""
+    b = {"fig": _section({"daemon_vs_page_geomean@x=1": 0.0})}
+    f = {"fig": _section({"daemon_vs_page_geomean@x=1": 0.0})}
+    (_, _, rel, status) = _statuses(b, f)[("fig", "daemon_vs_page_geomean@x=1")]
+    assert status == "ok"
+    assert rel == 0.0
+
+
+def test_zero_base_nonzero_fresh_still_fails():
+    """0 -> nonzero genuinely diverged: rel stays inf and fails the gate."""
+    b = {"fig": _section({"daemon_vs_page_geomean": 0.0})}
+    f = {"fig": _section({"daemon_vs_page_geomean": 2.0})}
+    (_, _, rel, status) = _statuses(b, f)[("fig", "daemon_vs_page_geomean")]
+    assert status == "regression"
+    assert rel == float("inf")
+
+
+def test_spec_mismatch_refuses_comparison():
+    b = {"fig": _section({"daemon_vs_page_geomean": 3.0},
+                         spec={"n_accesses": 1000})}
+    f = {"fig": _section({"daemon_vs_page_geomean": 3.0},
+                         spec={"n_accesses": 2000})}
+    assert _statuses(b, f)[("fig", "spec")][3] == "spec-mismatch"
+
+
+def test_missing_section_and_key_fail():
+    b = {"fig": _section({"daemon_vs_page_geomean": 3.0,
+                          "policy_vs_page_geomean@x": 1.5})}
+    assert _statuses(b, {})[("fig", "")][3] == "missing-section"
+    f = {"fig": _section({"daemon_vs_page_geomean": 3.0})}
+    assert _statuses(b, f)[("fig", "policy_vs_page_geomean@x")][3] == \
+        "missing-key"
+
+
+def test_ungated_keys_are_ignored():
+    b = {"fig": _section({"daemon_vs_page_geomean": 3.0, "wall_s": 10.0})}
+    f = {"fig": _section({"daemon_vs_page_geomean": 3.0, "wall_s": 99.0})}
+    assert ("fig", "wall_s") not in _statuses(b, f)
