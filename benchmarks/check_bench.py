@@ -6,7 +6,7 @@ tolerance (default 5%).  The committed BENCH_sim.json is the output of the
 exact CI command::
 
     PYTHONPATH=src python benchmarks/run.py --quick \
-        --only fig2,fig4_top,fig4_bottom,sweep_jitter,sweep_nmcs,fig5,fig6,fig7
+        --only fig2,fig4_top,fig4_bottom,sweep_jitter,sweep_nmcs,fig5,fig6,fig7,fig7_wshare,fig8
 
 so CI can regenerate it deterministically and fail the workflow when a
 code change moves any geomean by more than the tolerance — in EITHER

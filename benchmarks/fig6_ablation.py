@@ -17,6 +17,10 @@ The per-policy geomean speedups over 'page' merge into BENCH_sim.json
 (docs/SWEEPS.md) under ``policy_vs_page_geomean@<policy>`` and are gated in
 CI by check_bench.py.  The paper's synergy claim shows up as every ablation
 landing strictly between 'page' (1.0) and 'daemon' on the geomean.
+
+:func:`run_variance` (run.py section ``fig6_var``, nightly-only) re-runs
+the grid with a seed axis + ``derive_seeds=True`` and reports each
+geomean as mean ± 95% CI across seeds.
 """
 from __future__ import annotations
 
@@ -29,6 +33,7 @@ from repro.core.sim import (
     default_workers,
     fig6_ablation_spec,
     fig6_geomeans,
+    geomean,
     run_sweep,
     write_bench,
 )
@@ -53,14 +58,79 @@ def run(n_accesses: int = 20_000, workers: int | None = None,
     return rows
 
 
+# two-sided 97.5% Student-t critical values by degrees of freedom (k-1
+# seeds); untabulated df fall back to the nearest LOWER entry (a larger,
+# conservative critical value); beyond df=30 the normal 1.96 is close enough
+_T975 = {1: 12.706, 2: 4.303, 3: 3.182, 4: 2.776, 5: 2.571, 6: 2.447,
+         7: 2.365, 8: 2.306, 9: 2.262, 10: 2.228, 15: 2.131, 20: 2.086,
+         30: 2.042}
+
+
+def _t975(df: int) -> float:
+    if df > max(_T975):
+        return 1.96
+    return _T975.get(df) or _T975[max(d for d in _T975 if d <= df)]
+
+
+def run_variance(n_accesses: int = 20_000, workers: int | None = None,
+                 seeds=(0, 1, 2, 3, 4), bench_path: str = BENCH_PATH):
+    """Variance study on the ablation grid (ROADMAP item, nightly-only):
+    the fig6 grid re-run with a ``seed`` axis and ``derive_seeds=True`` so
+    every seed draws decorrelated traces while schemes within a seed stay
+    trace-paired (the derived seed excludes the scheme axis — sweep.py),
+    keeping each per-seed ratio a paired comparison.  Reports each
+    ablation's geomean speedup over 'page' as mean ± a 95% CI across seeds
+    (Student-t critical value — at 5 seeds the normal 1.96 would
+    under-cover).  Ledger keys use the non-gated ``ablation_geomean_*``
+    prefix — the quick CI grid and its gated single-seed fig6 keys are
+    unchanged."""
+    workers = default_workers() if workers is None else workers
+    import dataclasses
+
+    base = fig6_ablation_spec(n_accesses=n_accesses)
+    sw = dataclasses.replace(
+        base, name="fig6_variance",
+        axes={**dict(base.axes), "seed": tuple(seeds)},
+        derive_seeds=True,
+    )
+    res = run_sweep(sw, workers=workers)
+    per_call = res.us_per_call
+    rows, derived = [], {}
+    g = res.grid("workload", "scheme", "seed")
+    for p in sw.axes["scheme"]:
+        if p == "page":
+            continue
+        per_seed = []
+        for seed in sw.axes["seed"]:
+            per_seed.append(geomean([
+                g[(w, "page", seed)].metrics.cycles
+                / g[(w, p, seed)].metrics.cycles
+                for w in sw.axes["workload"]
+            ]))
+        k = len(per_seed)
+        mean = sum(per_seed) / k
+        var = sum((x - mean) ** 2 for x in per_seed) / max(1, k - 1)
+        ci = _t975(k - 1) * (var ** 0.5) / (k ** 0.5)
+        derived[f"ablation_geomean_mean@{p}"] = mean
+        derived[f"ablation_geomean_ci95@{p}"] = ci
+        rows.append((f"fig6var/{p}/geomean_vs_page", per_call,
+                     f"mean={mean:.3f};ci95={ci:.3f};seeds={k}"))
+    write_bench(bench_path, res, derived=derived)
+    return rows
+
+
 def main() -> None:
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--workers", type=int, default=None)
     ap.add_argument("--n-accesses", type=int, default=20_000)
+    ap.add_argument("--variance", action="store_true",
+                    help="run the seed-axis variance grid instead of the "
+                         "single-seed ablation grid")
     args = ap.parse_args()
-    for tag, us, derived in run(args.n_accesses, args.workers):
+    fn = run_variance if args.variance else run
+    for tag, us, derived in fn(args.n_accesses, args.workers):
         print(f"{tag},{us:.1f},{derived}")
 
 

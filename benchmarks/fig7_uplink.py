@@ -14,6 +14,9 @@ scheme; the per-uplink_bw daemon-vs-page geomeans merge into BENCH_sim.json
 (docs/SWEEPS.md) and are gated in CI by check_bench.py.  The headline:
 the geomean *increases* as ``uplink_bw`` drops from 1.0x to 0.25x of
 ``link_bw`` — bandwidth asymmetry makes the reverse path first-order.
+
+:func:`run_wshare` (run.py section ``fig7_wshare``) additionally surfaces
+``writeback_share`` as a swept axis at a fixed 0.125x uplink.
 """
 from __future__ import annotations
 
@@ -23,6 +26,8 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from repro.core.sim import (
+    SimConfig,
+    Sweep,
     default_workers,
     fig7_uplink_spec,
     run_sweep,
@@ -56,14 +61,61 @@ def run(n_accesses: int = 15_000, workers: int | None = None,
     return rows
 
 
+def run_wshare(n_accesses: int = 15_000, workers: int | None = None,
+               bench_path: str = BENCH_PATH):
+    """ROADMAP uplink follow-on: ``writeback_share`` as a swept axis.  At a
+    strongly-asymmetric (0.125x) uplink, sweep the bandwidth fraction
+    daemon's dual-queue uplink grants the writeback (bulk) class when both
+    classes are backlogged; request packets keep ``1 - writeback_share``.
+    The page scheme's FIFO uplink ignores the knob, so the daemon-vs-page
+    geomean per share value isolates how much request-packet protection is
+    worth — it shrinks as ``writeback_share`` grows and daemon's own
+    requests lose their protected lane (the share only binds when both
+    classes are simultaneously backlogged, so the spread is percent-level,
+    not the head-of-line cliff of the fifo-vs-dual comparison in fig7).
+    Derived ``daemon_vs_page_geomean@writeback_share=<s>`` keys are
+    CI-gated like every other geomean."""
+    workers = default_workers() if workers is None else workers
+    base = SimConfig()
+    sw = Sweep(
+        name="fig7_wshare",
+        axes={
+            "workload": ("wh", "st", "pf"),
+            "writeback_share": (0.1, 0.4, 0.8),
+            "scheme": ("page", "daemon"),
+        },
+        base=base.with_(uplink_bw=0.125 * base.link_bw),
+        n_accesses=n_accesses,
+    )
+    res = run_sweep(sw, workers=workers)
+    per_call = res.us_per_call
+    rows, derived = [], {}
+    for ws in sw.axes["writeback_share"]:
+        sub = res.filter(writeback_share=ws)
+        g = scheme_geomean(sub)
+        derived[f"daemon_vs_page_geomean@writeback_share={ws}"] = g
+        rows.append((f"fig7_wshare/ws{ws}/geomean_daemon_vs_page", per_call,
+                     f"speedup={g:.3f}"))
+        for key, ratio in sorted(scheme_ratio(sub).items()):
+            k = dict(key)
+            rows.append((f"fig7_wshare/{k['workload']}/ws{ws}", per_call,
+                         f"speedup={ratio:.3f}"))
+    write_bench(bench_path, res, derived=derived)
+    return rows
+
+
 def main() -> None:
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--workers", type=int, default=None)
     ap.add_argument("--n-accesses", type=int, default=15_000)
+    ap.add_argument("--wshare", action="store_true",
+                    help="run the writeback_share sweep instead of the "
+                         "uplink_bw grid")
     args = ap.parse_args()
-    for tag, us, derived in run(args.n_accesses, args.workers):
+    fn = run_wshare if args.wshare else run
+    for tag, us, derived in fn(args.n_accesses, args.workers):
         print(f"{tag},{us:.1f},{derived}")
 
 

@@ -17,9 +17,11 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 def list_registries(section_names) -> None:
     """--list: the registered policies (component matrix), workloads
     (metadata), and benchmark sections."""
+    from repro.capture import CAPTURED, capture_meta
     from repro.core.sim import (
         available_policies,
         available_workloads,
+        compressibility_of,
         get_policy,
         get_workload,
     )
@@ -42,8 +44,19 @@ def list_registries(section_names) -> None:
         print(f"  {name:18s} {comp:44s} {p.description}")
     print("workloads (name: compressibility, description):")
     for name in available_workloads():
+        if name in CAPTURED:
+            continue  # listed below with full source-kernel metadata
         w = get_workload(name)
-        print(f"  {name:18s} x{w.compressibility:<4.1f} {w.description}")
+        print(f"  {name:18s} x{compressibility_of(name):<4.1f} {w.description}")
+    print("captured kernel workloads (source-kernel metadata, DESIGN.md §2.8):")
+    for name in CAPTURED:
+        m = capture_meta(name)
+        grid = "x".join(str(g) for g in m["grid"])
+        print(f"  {name:18s} {m['kernel']}/{m['variant']:8s} grid={grid:10s} "
+              f"{m['n_accesses']} accesses, "
+              f"{m['footprint'] >> 10} KiB footprint, "
+              f"x{m['compressibility']:.2f} measured, "
+              f"operands={','.join(m['operands'])}")
     print("sections:")
     print("  " + ",".join(section_names))
 
@@ -59,6 +72,7 @@ def main() -> None:
         fig5_scalability,
         fig6_ablation,
         fig7_uplink,
+        fig8_kernels,
         roofline,
     )
 
@@ -81,6 +95,10 @@ def main() -> None:
     # fig7 needs >= 1000 accesses/thread so the 'wh' workload actually
     # churns its local page cache (writebacks are the traffic under test)
     n_fig7 = 4_000 if args.quick else 20_000
+    # fig8 needs >= 2000 accesses/thread so a captured-kernel replay window
+    # spans several tile bursts (the inter-tile jumps are the structure
+    # under test; one flash tile alone is ~512 line accesses)
+    n_fig8 = 8_000 if args.quick else 40_000
     w = args.workers
     sections = [
         ("fig2", lambda: fig2_schemes.run(n_accesses=n_fig2, workers=w)),
@@ -91,21 +109,29 @@ def main() -> None:
         ("fig5", lambda: fig5_scalability.run(n_accesses=n_fig4, workers=w)),
         ("fig6", lambda: fig6_ablation.run(n_accesses=n_fig6, workers=w)),
         ("fig7", lambda: fig7_uplink.run(n_accesses=n_fig7, workers=w)),
+        ("fig7_wshare", lambda: fig7_uplink.run_wshare(n_accesses=n_fig7, workers=w)),
+        ("fig8", lambda: fig8_kernels.run(n_accesses=n_fig8, workers=w)),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]
+    # opt-in sections: run only when explicitly named in --only (the
+    # seed-axis variance grid is ~6x a fig6 run — nightly.yml selects it;
+    # a bare `run.py` keeps the canonical ledger sections)
+    optin = [
+        ("fig6_var", lambda: fig6_ablation.run_variance(n_accesses=n_fig6, workers=w)),
+    ]
+    section_names = [s[0] for s in sections] + [s[0] for s in optin]
     if args.list:
-        list_registries([s[0] for s in sections])
+        list_registries(section_names)
         return
     if args.only:
         keep = {s.strip() for s in args.only.split(",") if s.strip()}
-        known = {s[0] for s in sections}
-        unknown = keep - known
+        unknown = keep - set(section_names)
         if unknown:
             sys.exit(f"unknown --only section(s) {sorted(unknown)}; "
-                     f"choose from {sorted(known)} "
+                     f"choose from {sorted(section_names)} "
                      f"(see `PYTHONPATH=src python -m benchmarks.run --list`)")
-        sections = [s for s in sections if s[0] in keep]
+        sections = [s for s in sections + optin if s[0] in keep]
 
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,48 @@
+"""Kernel-trace capture: drive the DS simulator with the Pallas kernels'
+own block-level memory streams (DESIGN.md §2.8).
+
+The subsystem derives deterministic ``(gaps, addrs, writes)`` traces from
+the kernels' tiling geometry — no TPU, no jax at registration time — and
+registers them as first-class simulator workloads (``fa_prefill``,
+``fa_decode``, ``mamba_fwd``, ``bq_quant``), each with a
+measured-from-data compressibility:
+
+    from repro.core.sim import run_one
+    run_one("fa_prefill", "daemon")          # works out of the box
+
+    from repro.capture import save_kernel_trace
+    save_kernel_trace("bq_quant", "bq.npz")  # standard .npz replay file
+
+Layers: geometry (jax-free tiling model + disjoint operand regions) ->
+recorder (grid walk, Pallas block-reuse semantics, roofline compute gaps)
+-> compress (measured payload compressibility) -> workloads (catalog +
+registry hook).  The per-kernel geometry shims live in each kernel's
+``ops.py`` next to the jit wrapper they mirror.
+"""
+from repro.capture.compress import measure_ratio, measured_compressibility
+from repro.capture.geometry import (
+    KernelGeometry,
+    Operand,
+    assign_regions,
+    block_line_addrs,
+)
+from repro.capture.recorder import CaptureResult, KernelTraceRecorder
+from repro.capture.workloads import (
+    CAPTURED,
+    CapturedKernel,
+    capture,
+    capture_meta,
+    clear_capture_cache,
+    measured_compressibility_of,
+    register_captured_kernels,
+    save_kernel_trace,
+)
+
+__all__ = [
+    "KernelGeometry", "Operand", "assign_regions", "block_line_addrs",
+    "CaptureResult", "KernelTraceRecorder",
+    "measure_ratio", "measured_compressibility",
+    "CAPTURED", "CapturedKernel", "capture", "capture_meta",
+    "clear_capture_cache", "measured_compressibility_of",
+    "register_captured_kernels", "save_kernel_trace",
+]

@@ -1,0 +1,166 @@
+"""Kernel tiling geometry for trace capture (DESIGN.md §2.8).
+
+A Pallas kernel's HBM traffic is fully determined by its *tiling geometry*:
+the grid, and per operand a block shape plus the BlockSpec index map that
+places a block for every grid step.  This module gives that geometry a
+first-class, jax-free representation so the DS simulator can observe the
+kernels' block-level memory streams without a TPU (or even a jax import):
+each kernel's ``ops.py`` carries a lightweight tracing shim that mirrors
+its own grid / index-map math into a :class:`KernelGeometry`, and the
+:class:`~repro.capture.recorder.KernelTraceRecorder` walks it.
+
+Operands are laid out in **disjoint, page-aligned address regions** (one
+guard page apart) so the replayed trace preserves which tensor a line
+belongs to — inter-operand jumps in the captured stream are real region
+switches, never aliasing artifacts (locked by tests/test_capture.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+PAGE_BYTES = 4096  # region alignment; matches SimConfig.page_bytes default
+LINE_BYTES = 64
+
+# payload models for measured compressibility (compress.py): what byte
+# distribution a region holds when the kernel runs on representative data
+PAYLOADS = ("f32_dense", "f32_act_sparse", "f32_pos", "f32_scales",
+            "int8_quant")
+
+
+@dataclass(frozen=True)
+class Operand:
+    """One kernel operand: an HBM array tiled into VMEM blocks.
+
+    ``index_map`` is the BlockSpec index map — grid indices -> block
+    indices — copied from the kernel's own ``pallas_call`` (the shim in the
+    kernel's ``ops.py`` is the authoritative mirror; drift against the
+    kernel constants is locked by tests).  ``payload`` names the
+    representative byte distribution of the region (see PAYLOADS).
+    """
+
+    name: str
+    shape: Tuple[int, ...]  # full array shape
+    block: Tuple[int, ...]  # VMEM block shape (same rank)
+    index_map: Callable[..., Tuple[int, ...]]
+    elem_bytes: int = 4
+    is_output: bool = False
+    payload: str = "f32_dense"
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.block):
+            raise ValueError(
+                f"operand {self.name!r}: shape {self.shape} and block "
+                f"{self.block} must have equal rank")
+        for s, b in zip(self.shape, self.block):
+            if s % b:
+                raise ValueError(
+                    f"operand {self.name!r}: block {self.block} must tile "
+                    f"shape {self.shape} exactly")
+        if self.payload not in PAYLOADS:
+            raise ValueError(
+                f"operand {self.name!r}: unknown payload {self.payload!r} "
+                f"(choices: {PAYLOADS})")
+
+    @property
+    def nbytes(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n * self.elem_bytes
+
+    @property
+    def block_nbytes(self) -> int:
+        n = 1
+        for b in self.block:
+            n *= b
+        return n * self.elem_bytes
+
+
+@dataclass(frozen=True)
+class KernelGeometry:
+    """Grid + operands of one kernel launch — everything the recorder needs
+    to derive the launch's block-level HBM access stream.
+
+    ``flops_per_step`` feeds the roofline gap model (recorder.py): the
+    compute work one grid step overlaps with its tile movement.  The grid
+    executes minor-to-major with the **last axis innermost and sequential**
+    (TPU semantics — this ordering is what makes carried VMEM state and
+    block reuse across steps meaningful).
+    """
+
+    kernel: str  # source kernel, e.g. "flash_attention"
+    variant: str  # e.g. "prefill"
+    grid: Tuple[int, ...]
+    operands: Tuple[Operand, ...]
+    flops_per_step: float = 0.0
+
+    def __post_init__(self):
+        names = [op.name for op in self.operands]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate operand names: {names}")
+
+    @property
+    def n_steps(self) -> int:
+        n = 1
+        for g in self.grid:
+            n *= g
+        return n
+
+    def steps(self):
+        """Grid steps in execution order (last axis fastest)."""
+        return np.ndindex(*self.grid)
+
+
+def assign_regions(geom: KernelGeometry) -> Dict[str, int]:
+    """Operand name -> base byte address.  Regions are page-aligned, sized
+    to the operand, laid out in declaration order with one guard page
+    between — disjoint by construction."""
+    bases: Dict[str, int] = {}
+    cursor = 0
+    for op in geom.operands:
+        bases[op.name] = cursor
+        size = -(-op.nbytes // PAGE_BYTES) * PAGE_BYTES  # round up
+        cursor += size + PAGE_BYTES  # guard page
+    return bases
+
+
+def block_line_addrs(op: Operand, base: int,
+                     block_idx: Tuple[int, ...]) -> np.ndarray:
+    """Line-granular byte addresses touched when ``block_idx`` of ``op``
+    moves between HBM and VMEM.
+
+    A block is contiguous along the minor (last) axis only; every other
+    block axis contributes strided rows — so a (TR, TC) tile of an (R, C)
+    array with TC < C yields TR separate runs, which is exactly the
+    intra-tile-dense / inter-run-strided shape real tiled kernels put on
+    the memory system.
+    """
+    rank = len(op.shape)
+    # element strides (row-major)
+    strides = [0] * rank
+    acc = 1
+    for i in range(rank - 1, -1, -1):
+        strides[i] = acc
+        acc *= op.shape[i]
+    # start element offset of the block
+    start = sum(block_idx[i] * op.block[i] * strides[i] for i in range(rank))
+    # row starts: cartesian product over all block axes except the last
+    row_elems = [np.arange(op.block[i]) * strides[i] for i in range(rank - 1)]
+    rows = np.zeros(1, dtype=np.int64)
+    for r in row_elems:
+        rows = (rows[:, None] + r[None, :]).reshape(-1)
+    run_bytes = op.block[-1] * op.elem_bytes
+    run_starts = base + (start + rows) * op.elem_bytes
+    # per-run line span from first to LAST touched byte: a run whose start
+    # is not line-aligned can cross one more line boundary than its length
+    # alone implies, so counts vary per run
+    first = run_starts // LINE_BYTES
+    last = (run_starts + run_bytes - 1) // LINE_BYTES
+    counts = last - first + 1
+    total = int(counts.sum())
+    within = np.arange(total) - np.repeat(np.cumsum(counts) - counts, counts)
+    lines = (np.repeat(first, counts) + within) * LINE_BYTES
+    return lines.astype(np.int64)

@@ -1,0 +1,132 @@
+"""KernelTraceRecorder: derive a DS-simulator trace from kernel geometry
+(DESIGN.md §2.8).
+
+The recorder walks the grid in TPU execution order (last axis innermost,
+sequential) and replays the Pallas pipelining contract: an operand's block
+moves HBM<->VMEM **only when its index map changes value between steps** —
+a flash-attention Q tile parked across the whole KV loop is fetched once,
+while K/V stream every step; an output block is written back when the grid
+moves off it (and at grid end).  Each movement is emitted at line (64 B)
+granularity over the block's byte extent, so the captured stream has the
+signature shape of real tiled kernels: dense spatially-local runs inside a
+tile, abrupt inter-tile jumps between operand regions.
+
+Compute gaps come from the roofline model (launch/roofline.py): a trace's
+``gaps`` are *compute* cycles between accesses (the simulator prices the
+memory side itself), so one grid step's MXU/VPU work — ``flops_per_step /
+PEAK_FLOPS`` seconds at the simulator's 3 GHz nominal clock — lands as a
+lump on the step's first access, and the accesses inside a tile burst run
+back-to-back (gap 1).  The captured stream is therefore bursty by
+construction: dense line runs per tile, a roofline compute lump between
+tiles.  The walk is fully deterministic — no RNG anywhere — so the same
+geometry always yields a bit-identical trace (locked by
+tests/test_capture.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.capture.geometry import KernelGeometry, assign_regions, block_line_addrs
+from repro.launch.roofline import PEAK_FLOPS
+
+CLOCK_HZ = 3e9  # simulator cycles are a 3 GHz nominal clock (SimConfig)
+
+Trace = Tuple[np.ndarray, np.ndarray, np.ndarray]
+
+
+@dataclass
+class CaptureResult:
+    """A captured kernel launch: the (gaps, addrs, writes) trace plus the
+    per-operand movement accounting the compressibility measurement weighs
+    payload samples by (compress.py)."""
+
+    geom: KernelGeometry
+    gaps: np.ndarray
+    addrs: np.ndarray
+    writes: np.ndarray
+    regions: Dict[str, int]  # operand -> base byte address
+    moved_bytes: Dict[str, int]  # operand -> total bytes moved over HBM
+
+    @property
+    def trace(self) -> Trace:
+        return self.gaps, self.addrs, self.writes
+
+    @property
+    def n_accesses(self) -> int:
+        return len(self.addrs)
+
+    @property
+    def footprint(self) -> int:
+        return int(self.addrs.max()) + 64 if len(self.addrs) else 0
+
+
+class KernelTraceRecorder:
+    """Walk one :class:`KernelGeometry` and record its block-level trace."""
+
+    def __init__(self, geom: KernelGeometry):
+        self.geom = geom
+        self.regions = assign_regions(geom)
+
+    def record(self) -> CaptureResult:
+        geom = self.geom
+        chunks_addr: list = []
+        chunks_write: list = []
+        step_access_counts: list = []
+        step_cycles: list = []
+        last_idx: Dict[str, Tuple[int, ...]] = {}
+        moved: Dict[str, int] = {op.name: 0 for op in geom.operands}
+
+        def move(op, block_idx, write: bool):
+            lines = block_line_addrs(op, self.regions[op.name], block_idx)
+            chunks_addr.append(lines)
+            chunks_write.append(np.full(len(lines), write, bool))
+            moved[op.name] += op.block_nbytes
+            return len(lines)
+
+        step_compute = geom.flops_per_step / PEAK_FLOPS * CLOCK_HZ
+        for step in geom.steps():
+            n_acc = 0
+            for op in geom.operands:
+                idx = tuple(int(i) for i in op.index_map(*step))
+                prev = last_idx.get(op.name)
+                if prev == idx:
+                    continue  # block parked in VMEM: no HBM movement
+                if op.is_output:
+                    # write back the block we are moving OFF of; the new
+                    # block needs no fetch (outputs are write-only here)
+                    if prev is not None:
+                        n_acc += move(op, prev, write=True)
+                else:
+                    n_acc += move(op, idx, write=False)
+                last_idx[op.name] = idx
+            step_access_counts.append(n_acc)
+            step_cycles.append(step_compute)
+        # final writeback of every output's resident block (no compute left)
+        n_final = 0
+        for op in geom.operands:
+            if op.is_output and op.name in last_idx:
+                n_final += move(op, last_idx[op.name], write=True)
+        if n_final:
+            step_access_counts.append(n_final)
+            step_cycles.append(0.0)
+
+        addrs = np.concatenate(chunks_addr) if chunks_addr else np.zeros(0, np.int64)
+        writes = np.concatenate(chunks_write) if chunks_write else np.zeros(0, bool)
+        # bursty gap layout: the step's compute lump on its first access,
+        # back-to-back (gap 1) inside the tile burst; steps that moved
+        # nothing carry their compute into the next burst's lump
+        gaps = np.ones(len(addrs), np.int64)
+        pos = 0
+        carry = 0.0
+        for n_acc, cyc in zip(step_access_counts, step_cycles):
+            if n_acc == 0:
+                carry += cyc
+                continue
+            gaps[pos] = max(1, int(round(cyc + carry)))
+            carry = 0.0
+            pos += n_acc
+        return CaptureResult(geom=geom, gaps=gaps, addrs=addrs, writes=writes,
+                             regions=dict(self.regions), moved_bytes=moved)

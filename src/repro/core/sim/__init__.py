@@ -23,6 +23,8 @@ from repro.core.sim.runner import (
     fig6_geomeans,
     fig7_uplink,
     fig7_uplink_spec,
+    fig8_kernels,
+    fig8_kernels_spec,
     geomean,
     paper_claims,
     run_one,
@@ -44,6 +46,7 @@ from repro.core.sim.trace import (
     WORKLOADS,
     WorkloadSpec,
     available_workloads,
+    compressibility_of,
     generate,
     get_workload,
     register_trace_file,
@@ -51,6 +54,13 @@ from repro.core.sim.trace import (
     save_trace,
     unregister_workload,
 )
+
+# captured Pallas-kernel workloads (fa_prefill, fa_decode, mamba_fwd,
+# bq_quant — DESIGN.md §2.8) register at import so they work out of the
+# box; trace derivation / jax imports stay lazy until first use
+from repro.capture.workloads import register_captured_kernels as _reg_captured
+
+_reg_captured()
 
 __all__ = [
     "SCHEMES", "Metrics", "SimConfig", "Simulator", "simulate", "LinkSchedule",
@@ -61,11 +71,12 @@ __all__ = [
     "fig4_top", "fig4_top_spec", "fig5_scalability", "fig5_scalability_spec",
     "fig6_ablation", "fig6_ablation_spec", "fig6_geomeans",
     "fig7_uplink", "fig7_uplink_spec",
+    "fig8_kernels", "fig8_kernels_spec",
     "geomean", "paper_claims",
     "run_one", "slowdowns",
     "DEFAULT_SUITE", "WORKLOADS", "WorkloadSpec", "available_workloads",
-    "generate", "get_workload", "register_trace_file", "register_workload",
-    "save_trace", "unregister_workload",
+    "compressibility_of", "generate", "get_workload", "register_trace_file",
+    "register_workload", "save_trace", "unregister_workload",
     "CellResult", "Sweep", "SweepResult", "cell_seed", "default_workers",
     "run_sweep", "scheme_geomean", "scheme_ratio", "write_bench",
 ]

@@ -11,6 +11,7 @@ out over a process pool (results are identical to the serial run).
   fig5_scalability(...) n_ccs x scheme x workload-mix (multi-CC contention)
   fig6_ablation(...) ablation policies x workloads (synergy decomposition)
   fig7_uplink(...) uplink_bw x write-heavy workload x n_ccs (uplink contention)
+  fig8_kernels(...) captured Pallas-kernel streams x policy x bandwidth
   paper_claims(...) geomean speedups of daemon over page
 
 Schemes and workloads are registry names (policy.py / trace.py); every
@@ -403,6 +404,81 @@ def fig7_uplink(
                 )
         rows.append({"workload": "geomean", "uplink_bw": ub,
                      "speedup": geomean(ratios)})
+    return rows
+
+
+# the fig8 captured-kernel grid (DESIGN.md §2.8): the four Pallas-kernel
+# streams captured by repro.capture, registered at import
+KERNEL_WORKLOADS = ("fa_prefill", "fa_decode", "mamba_fwd", "bq_quant")
+# page vs daemon plus the granularity extremes: pure line movement and
+# daemon minus the selection unit (fixed granularity) — the ablations that
+# show WHERE adaptive selection matters on real tiled streams
+KERNEL_SCHEMES = ("page", "cacheline", "daemon_fixed_gran", "daemon")
+KERNEL_BW_FRACS = (0.125, 0.5, 1.0)
+
+
+def fig8_kernels_spec(
+    workloads: Iterable[str] = KERNEL_WORKLOADS,
+    schemes: Iterable[str] = KERNEL_SCHEMES,
+    bw_fracs: Iterable[float] = KERNEL_BW_FRACS,
+    *,
+    cfg: Optional[SimConfig] = None,
+    **kw,
+) -> Sweep:
+    """The canonical captured-kernel grid (DESIGN.md §2.8): captured Pallas
+    workloads x movement policy x network bandwidth.  Shared by the API and
+    benchmarks/fig8_kernels.py so the 'fig8_kernels' BENCH_sim.json entry
+    has one meaning."""
+    axes = {
+        "workload": tuple(workloads),
+        "link_bw_frac": tuple(bw_fracs),
+        "scheme": tuple(schemes),
+    }
+    return Sweep(name="fig8_kernels", axes=axes, base=cfg or SimConfig(),
+                 **_sweep_kw(kw))
+
+
+def fig8_kernels(
+    workloads: Iterable[str] = KERNEL_WORKLOADS,
+    schemes: Iterable[str] = KERNEL_SCHEMES,
+    bw_fracs: Iterable[float] = KERNEL_BW_FRACS,
+    *,
+    cfg: Optional[SimConfig] = None,
+    workers: Optional[int] = None,
+    **kw,
+) -> List[dict]:
+    """Movement policies on the kernels' own memory streams: per captured
+    workload, the daemon-vs-page geomean across the bandwidth range plus
+    per-(bw, scheme) speedups over page.  The headline: real tiled streams
+    (dense spatial reuse inside a tile, abrupt inter-tile jumps) are
+    page-friendly in a way no synthetic source in the suite is — daemon's
+    selection unit correctly converges to page granularity (geomean ~1x
+    where the synthetic suite gives ~3x) while pure line movement
+    collapses."""
+    sw = fig8_kernels_spec(workloads, schemes, bw_fracs, cfg=cfg, **kw)
+    res = run_sweep(sw, workers=workers)
+    g = res.grid("workload", "link_bw_frac", "scheme")
+    rows = []
+    for w in sw.axes["workload"]:
+        ratios = []
+        for bw in sw.axes["link_bw_frac"]:
+            mp = g[(w, bw, "page")].metrics
+            ratios.append(mp.cycles / g[(w, bw, "daemon")].metrics.cycles)
+            for s in sw.axes["scheme"]:
+                if s == "page":
+                    continue
+                ms = g[(w, bw, s)].metrics
+                rows.append(
+                    {
+                        "workload": w,
+                        "bw_frac": bw,
+                        "scheme": s,
+                        "speedup_vs_page": mp.cycles / ms.cycles,
+                        "net_bytes_ratio": mp.net_bytes / max(ms.net_bytes, 1e-9),
+                    }
+                )
+        rows.append({"workload": w, "scheme": "daemon",
+                     "bw_frac": "geomean", "speedup_vs_page": geomean(ratios)})
     return rows
 
 

@@ -117,8 +117,11 @@ class Sweep:
     ``derive_seeds=False`` (default) runs every cell at ``base_seed`` (or the
     explicit ``seed`` axis) — required when cells are later compared ratio-
     style against each other on identical traces.  ``derive_seeds=True``
-    mixes a hash of the cell's axes into the seed so cells draw decorrelated
-    traces (for variance studies)."""
+    mixes a hash of the cell's axes — excluding ``scheme``, which never
+    influences the trace — into the seed, so cells draw decorrelated traces
+    across seeds/workloads/configs while cells differing only in scheme
+    still run the SAME traces: variance studies keep scheme-ratio
+    comparisons trace-paired."""
 
     name: str
     axes: Mapping[str, Sequence[Any]]
@@ -186,7 +189,11 @@ def _run_cell(payload: Tuple[Sweep, Dict[str, Any]]) -> CellResult:
     cfg = sweep.base.with_(**cfg_kw) if cfg_kw else sweep.base
     seed = int(cell.get("seed", sweep.base_seed))
     if sweep.derive_seeds:
-        seed = cell_seed(cell, base_seed=seed)
+        # exclude 'scheme': it never influences trace generation, and
+        # hashing it would unpair the traces that scheme-ratio comparisons
+        # (scheme_ratio/scheme_geomean) divide against each other
+        seed = cell_seed({k: v for k, v in cell.items() if k != "scheme"},
+                         base_seed=seed)
     t0 = time.process_time()  # CPU time: robust to pool oversubscription
     m = run_one(
         cell.get("workload", "pr"),

@@ -58,12 +58,16 @@ class WorkloadSpec:
 
     ``compressibility`` is the mean page compression ratio for the
     link-compression model (ratio ~ N(mean, 0.15*mean), >= 1): graphs/int
-    data compress well; float/ML data less [paper §3(III)].
+    data compress well; float/ML data less [paper §3(III)].  It may also
+    be a zero-arg callable resolved (and cached by the callable) on first
+    use — measured-from-data sources (repro.capture) defer the measurement
+    so registration stays import-cheap; resolve via
+    :func:`compressibility_of`, never by reading the field directly.
     """
 
     name: str
     generator: Callable[[int, int, int], Trace]
-    compressibility: float = DEFAULT_COMPRESSIBILITY
+    compressibility: object = DEFAULT_COMPRESSIBILITY  # float | () -> float
     description: str = ""
 
     def trace(self, *, seed: int = 0, footprint: int = DEFAULT_FOOTPRINT,
@@ -137,8 +141,12 @@ def available_workloads() -> Tuple[str, ...]:
 
 def compressibility_of(name: str) -> float:
     """Per-workload mean page compression ratio; the empty name (direct
-    trace injection into ``simulate``) gets the neutral default."""
-    return get_workload(name).compressibility if name else DEFAULT_COMPRESSIBILITY
+    trace injection into ``simulate``) gets the neutral default.  Callable
+    (lazily measured) compressibilities are resolved here."""
+    if not name:
+        return DEFAULT_COMPRESSIBILITY
+    c = get_workload(name).compressibility
+    return float(c() if callable(c) else c)
 
 
 def generate(name: str, *, seed: int = 0, footprint: int = DEFAULT_FOOTPRINT,
@@ -149,6 +157,18 @@ def generate(name: str, *, seed: int = 0, footprint: int = DEFAULT_FOOTPRINT,
 # --------------------------------------------------------------------------
 # .npz trace replay
 # --------------------------------------------------------------------------
+
+
+def replay_slice(trace: Trace, seed: int, n: int) -> Trace:
+    """The replay view shared by ``.npz`` trace files and captured kernel
+    workloads (repro.capture): ``n`` truncates or tiles the trace and
+    ``seed`` rotates the starting offset so multiple threads replay the
+    same trace out of phase rather than in lockstep."""
+    gaps, addrs, writes = trace
+    total = len(addrs)
+    roll = (seed * 9973) % total
+    idx = (np.arange(n, dtype=np.int64) + roll) % total
+    return gaps[idx], addrs[idx], writes[idx]
 
 
 def save_trace(path: str, trace: Trace,
@@ -196,10 +216,7 @@ def register_trace_file(path: str, name: Optional[str] = None, *,
                          f"and non-empty")
 
     def replay(seed: int, footprint: int, n: int) -> Trace:
-        total = len(addrs)
-        roll = (seed * 9973) % total
-        idx = (np.arange(n, dtype=np.int64) + roll) % total
-        return gaps[idx], addrs[idx], writes[idx]
+        return replay_slice((gaps, addrs, writes), seed, n)
 
     return _register(WorkloadSpec(
         name=name, generator=replay, compressibility=comp,

@@ -3,6 +3,11 @@
 On TPU the Pallas kernel runs natively; elsewhere (this CPU container, and
 inside the dry-run so cost_analysis stays transparent) the pure-jnp reference
 path is used — numerically identical (tests assert exact equality).
+
+Also the kernel's trace-capture shim (:func:`trace_geometry`): the grid /
+BlockSpec index-map math of ``quantize_pallas`` mirrored into a jax-free
+:class:`~repro.capture.geometry.KernelGeometry` (DESIGN.md §2.8; drift
+against the kernel is locked by tests/test_capture.py).
 """
 from __future__ import annotations
 
@@ -50,6 +55,37 @@ def dequantize(q: jax.Array, scales: jax.Array, dtype=jnp.float32, *,
     else:
         x = ref.dequantize_ref(q2, s2, dtype)
     return x.reshape(shape)
+
+
+def trace_geometry(*, r: int, c: int, variant: str = "quant"):
+    """Capture shim: the exact grid + index maps of ``quantize_pallas`` for
+    an (R, C) f32 input — grid (R/TR, C/TC) with the column-tile axis
+    innermost, reading f32 tiles and writing the int8 payload + one f32
+    absmax scale per quantization block."""
+    from repro.capture.geometry import KernelGeometry, Operand
+    from repro.kernels.block_quant.block_quant import _tiles
+
+    assert c % BLOCK == 0, f"C={c} must be a multiple of {BLOCK}"
+    tr, tc = _tiles(r, c)
+    grid = (r // tr, c // tc)
+
+    def tile_map(i, j):
+        return (i, j)
+
+    # per grid step: abs + max-reduce + scale + round + clip over the tile
+    flops = 5.0 * tr * tc
+    return KernelGeometry(
+        kernel="block_quant", variant=variant, grid=grid,
+        operands=(
+            Operand("x", (r, c), (tr, tc), tile_map,
+                    payload="f32_act_sparse"),
+            Operand("q", (r, c), (tr, tc), tile_map, elem_bytes=1,
+                    is_output=True, payload="int8_quant"),
+            Operand("scales", (r, c // BLOCK), (tr, tc // BLOCK), tile_map,
+                    is_output=True, payload="f32_scales"),
+        ),
+        flops_per_step=flops,
+    )
 
 
 def wire_bytes(shape, dtype_bytes: int = 2, block: int = BLOCK) -> int:

@@ -67,15 +67,22 @@ def test_bench_ledger_merges_by_name(tmp_path):
 
 
 def test_config_axes_and_derived_seeds():
-    sw = Sweep(name="j", axes={"scheme": ("page",), "workload": ("pr",),
+    sw = Sweep(name="j", axes={"scheme": ("page", "daemon"), "workload": ("pr",),
                                "bw_jitter": (0.0, 0.5), "seed": (0, 1)},
                n_accesses=1_000, derive_seeds=True)
     res = run_sweep(sw)
-    assert len(res) == 4
-    # derived seeds are a pure function of the cell axes
+    assert len(res) == 8
+    # derived seeds are a pure function of the cell axes MINUS scheme, so
+    # scheme-ratio comparisons stay trace-paired even under derive_seeds
     for r in res.rows:
-        assert r.seed == cell_seed(r.axes, base_seed=r.axes["seed"])
-    assert len({r.seed for r in res.rows}) == 4
+        no_scheme = {k: v for k, v in r.axes.items() if k != "scheme"}
+        assert r.seed == cell_seed(no_scheme, base_seed=r.axes["seed"])
+    assert len({r.seed for r in res.rows}) == 4  # 2 jitter x 2 seed, shared
+    by_pair = {}
+    for r in res.rows:
+        key = (r.axes["bw_jitter"], r.axes["seed"])
+        by_pair.setdefault(key, set()).add(r.seed)
+    assert all(len(s) == 1 for s in by_pair.values())  # page/daemon paired
 
 
 def test_unknown_axis_rejected():
