@@ -6,14 +6,15 @@ tolerance (default 5%).  The committed BENCH_sim.json is the output of the
 exact CI command::
 
     PYTHONPATH=src python benchmarks/run.py --quick \
-        --only fig2,fig4_top,fig4_bottom,sweep_jitter,sweep_nmcs,fig5,fig6,fig7,fig7_wshare,fig8
+        --only fig2,fig4_top,fig4_bottom,sweep_jitter,sweep_nmcs,fig5,fig6,fig7,fig7_wshare,fig8,fig9
 
 so CI can regenerate it deterministically and fail the workflow when a
 code change moves any geomean by more than the tolerance — in EITHER
 direction: a >5% improvement means the committed ledger is stale and must
 be regenerated alongside the change.  Gated keys are the derived
-``daemon_vs_page_geomean*`` entries plus the fig6 ablation
-``policy_vs_page_geomean@<policy>`` entries.
+``daemon_vs_page_geomean*`` entries, the fig6 ablation
+``policy_vs_page_geomean@<policy>`` entries, and the fig9 serving tail
+ratios ``daemon_vs_page_p99@load=<L>:tenant=<T>``.
 
 Comparisons are refused (exit 1) when a section's sweep spec — axes,
 n_accesses, footprint, seeding, base SimConfig — differs between baseline
@@ -32,7 +33,8 @@ import argparse
 import json
 import sys
 
-GATED_PREFIXES = ("daemon_vs_page_geomean", "policy_vs_page_geomean")
+GATED_PREFIXES = ("daemon_vs_page_geomean", "policy_vs_page_geomean",
+                  "daemon_vs_page_p99")
 
 
 def _gated(key: str) -> bool:

@@ -73,6 +73,7 @@ def main() -> None:
         fig6_ablation,
         fig7_uplink,
         fig8_kernels,
+        fig9_serving,
         roofline,
     )
 
@@ -99,6 +100,13 @@ def main() -> None:
     # spans several tile bursts (the inter-tile jumps are the structure
     # under test; one flash tile alone is ~512 line accesses)
     n_fig8 = 8_000 if args.quick else 40_000
+    # fig9 quick shrinks the request count AND the per-phase slice sizes
+    # (request latency scales with phase length, so the quick grid stays
+    # deep in the same load regimes at ~1/4 the simulated accesses)
+    fig9_kw = (dict(n_requests=24, prefill_accesses=512, decode_steps=3,
+                    decode_accesses=128) if args.quick
+               else dict(n_requests=96, prefill_accesses=1024,
+                         decode_steps=4, decode_accesses=256))
     w = args.workers
     sections = [
         ("fig2", lambda: fig2_schemes.run(n_accesses=n_fig2, workers=w)),
@@ -111,6 +119,7 @@ def main() -> None:
         ("fig7", lambda: fig7_uplink.run(n_accesses=n_fig7, workers=w)),
         ("fig7_wshare", lambda: fig7_uplink.run_wshare(n_accesses=n_fig7, workers=w)),
         ("fig8", lambda: fig8_kernels.run(n_accesses=n_fig8, workers=w)),
+        ("fig9", lambda: fig9_serving.run(workers=w, **fig9_kw)),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]

@@ -9,6 +9,9 @@ from repro.core.sim.policy import (
 )
 from repro.core.sim.runner import (
     ABLATION_POLICIES,
+    SERVING_LOADS,
+    SERVING_ROUTERS,
+    SERVING_TENANTS,
     fig2,
     fig2_spec,
     fig2_sweep,
@@ -25,10 +28,26 @@ from repro.core.sim.runner import (
     fig7_uplink_spec,
     fig8_kernels,
     fig8_kernels_spec,
+    fig9_serving,
+    fig9_serving_spec,
+    fig9_tails,
     geomean,
     paper_claims,
     run_one,
     slowdowns,
+)
+from repro.core.sim.serving import (
+    RequestRecord,
+    RequestSpec,
+    RouterPolicy,
+    ServingScheduler,
+    available_routers,
+    build_requests,
+    get_router,
+    register_router,
+    request_arrivals,
+    serve_one,
+    unregister_router,
 )
 from repro.core.sim.sweep import (
     CellResult,
@@ -72,6 +91,11 @@ __all__ = [
     "fig6_ablation", "fig6_ablation_spec", "fig6_geomeans",
     "fig7_uplink", "fig7_uplink_spec",
     "fig8_kernels", "fig8_kernels_spec",
+    "fig9_serving", "fig9_serving_spec", "fig9_tails",
+    "SERVING_LOADS", "SERVING_ROUTERS", "SERVING_TENANTS",
+    "RequestRecord", "RequestSpec", "RouterPolicy", "ServingScheduler",
+    "available_routers", "build_requests", "get_router", "register_router",
+    "request_arrivals", "serve_one", "unregister_router",
     "geomean", "paper_claims",
     "run_one", "slowdowns",
     "DEFAULT_SUITE", "WORKLOADS", "WorkloadSpec", "available_workloads",

@@ -84,6 +84,32 @@ class SimConfig:
     comp_lat: int = 750  # page compression latency at the MC (~250 ns)
     decomp_lat: int = 750  # page decompression latency at the CC
 
+    # request-level serving layer (§2.9 of DESIGN.md).  ``serving_router``
+    # is ``None`` by default — the legacy closed-loop model, no request
+    # layer, bit-identical to every committed golden.  A registered
+    # RouterPolicy name (serving.py: round_robin / least_loaded /
+    # disagg_prefill) turns the cell into an open-loop LLM-serving
+    # simulation: Poisson arrivals at ``offered_load`` requests per Mcycle,
+    # each request one ``prefill_workload`` burst of ``prefill_accesses``
+    # followed by ``decode_steps`` x ``decode_accesses`` slices of
+    # ``decode_workload``, scheduled onto per-CC request slots (n_cores).
+    serving_router: Optional[str] = None
+    offered_load: float = 4.0  # requests per 1e6 cycles (open loop)
+    n_requests: int = 32
+    prefill_workload: str = "fa_prefill"
+    decode_workload: str = "fa_decode"
+    prefill_accesses: int = 1024
+    decode_steps: int = 4
+    decode_accesses: int = 256
+    # fraction of CCs in the prefill pool for disaggregated routers
+    serving_prefill_frac: float = 0.5
+    # per-pool MovementPolicy overrides (registered policy names) for
+    # disaggregated routers; None = the cell's scheme on every CC
+    serving_prefill_policy: Optional[str] = None
+    serving_decode_policy: Optional[str] = None
+    # stop firing events past this cycle horizon (None = drain all requests)
+    serving_horizon: Optional[float] = None
+
     def __post_init__(self):
         """Fail-fast validation at config construction time (DESIGN.md §2.1)
         — a bad parameter should never survive until deep inside a sweep."""
@@ -114,6 +140,25 @@ class SimConfig:
             if not (0.0 <= getattr(self, name) <= 1.0):
                 raise ValueError(
                     f"{name}={getattr(self, name)} must be in [0, 1]")
+        # serving layer (§2.9) — validated whether or not a router is set,
+        # so a bad sweep axis value fails at config construction time
+        for name in ("n_requests", "prefill_accesses", "decode_accesses"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name}={getattr(self, name)} must be >= 1")
+        if self.decode_steps < 0:
+            raise ValueError(f"decode_steps={self.decode_steps} must be >= 0")
+        if self.offered_load <= 0:
+            raise ValueError(
+                f"offered_load={self.offered_load} must be > 0 "
+                f"(requests per Mcycle)")
+        if not (0.0 < self.serving_prefill_frac < 1.0):
+            raise ValueError(
+                f"serving_prefill_frac={self.serving_prefill_frac} "
+                f"must be in (0, 1)")
+        if self.serving_horizon is not None and self.serving_horizon <= 0:
+            raise ValueError(
+                f"serving_horizon={self.serving_horizon} must be > 0 "
+                f"(or None to drain all requests)")
 
     @property
     def link_bw(self) -> float:
@@ -148,6 +193,14 @@ class Metrics:
     # and the full per-CC counter set); empty for single-CC runs, where the
     # aggregate IS the (only) CC's metrics.
     per_cc: list = field(default_factory=list)
+    # request-level serving rollup (§2.9): populated only by serve_one
+    # (cfg.serving_router set); all-zero/empty for legacy closed-loop runs.
+    requests_offered: int = 0
+    requests_completed: int = 0
+    request_p50: float = 0.0  # median request latency (cycles)
+    request_p99: float = 0.0  # tail request latency (cycles)
+    goodput: float = 0.0  # completed requests per Mcycle of makespan
+    requests: list = field(default_factory=list)  # per-request records
 
     @property
     def avg_access_cost(self) -> float:
@@ -178,6 +231,12 @@ class Metrics:
             "stall_episodes": self.stall_episodes,
             "bytes_saved_compression": self.bytes_saved_compression,
             "per_cc": self.per_cc,
+            "requests_offered": self.requests_offered,
+            "requests_completed": self.requests_completed,
+            "request_p50": self.request_p50,
+            "request_p99": self.request_p99,
+            "goodput": self.goodput,
+            "requests": self.requests,
         }
 
     @classmethod

@@ -64,8 +64,13 @@ class Engine:
     def at(self, t: float, fn: Callable[[float], None]) -> None:
         heapq.heappush(self.heap, (t, next(self._seq), fn))
 
-    def run(self) -> float:
+    def run(self, until: Optional[float] = None) -> float:
+        """Drain the event heap; with ``until`` set, stop before the first
+        event past that time (the serving layer's horizon cut, §2.9) —
+        remaining events stay queued and ``now`` is the last fired time."""
         while self.heap:
+            if until is not None and self.heap[0][0] > until:
+                break
             t, _, fn = heapq.heappop(self.heap)
             self.now = t
             fn(t)
@@ -523,6 +528,53 @@ class SharedDualQueueLink(SharedLink):
         return rates
 
 
+class SharedHeteroLink(SharedLink):
+    """Mixed-arbitration MC link for per-CC heterogeneous policies
+    (DESIGN.md §2.9): a flow whose policy partitions the link gets a
+    ``(flow, 'line')`` / ``(flow, 'page')`` lane pair; a FIFO flow gets one
+    ``(flow, 'all')`` lane that counts as bulk.  When any dual flow has a
+    line backlogged AND any bulk lane (a dual flow's pages, or a FIFO
+    flow's whole queue) is backlogged, the line class keeps ``line_share``
+    of the bandwidth; within a class backlogged lanes share equally.  A
+    FIFO flow's lines therefore still serialize behind its own pages (the
+    single-flow pathology), while dual flows keep the protected line class
+    — per-CC policy choices keep their meaning on a shared fabric.  Only
+    instantiated when CC policies actually disagree; homogeneous systems
+    keep the legacy Shared{Fifo,DualQueue}Link bit-for-bit."""
+
+    def __init__(self, eng: Engine, bw: float, line_share: float,
+                 flow_dual: Sequence[bool],
+                 sched: Optional[LinkSchedule] = None):
+        self.line_share = line_share
+        self.flow_dual = tuple(bool(d) for d in flow_dual)
+        channels: List[Hashable] = []
+        for f, dual in enumerate(self.flow_dual):
+            if dual:
+                channels += [(f, "line"), (f, "page")]
+            else:
+                channels.append((f, "all"))
+        super().__init__(eng, bw, channels, sched)
+
+    def _chan(self, flow: int, cls: str) -> Hashable:
+        return (flow, cls) if self.flow_dual[flow] else (flow, "all")
+
+    def _split(self, active: List[Hashable], bw: float) -> Dict[Hashable, float]:
+        lines = [c for c in active if c[1] == "line"]
+        bulk = [c for c in active if c[1] != "line"]
+        if lines and bulk:
+            lb, bb = self.line_share * bw, (1.0 - self.line_share) * bw
+        elif lines:
+            lb, bb = bw, 0.0
+        else:
+            lb, bb = 0.0, bw
+        rates: Dict[Hashable, float] = {}
+        for c in lines:
+            rates[c] = lb / len(lines)
+        for c in bulk:
+            rates[c] = bb / len(bulk)
+        return rates
+
+
 # --------------------------------------------------------------------------
 # requests / CC state
 # --------------------------------------------------------------------------
@@ -551,6 +603,10 @@ class Core:
     stalled: bool = False
     t_end: float = -1.0
     cc: int = 0  # owning compute complex (index into Simulator.ccs)
+    # serving layer (§2.9): the core issued its whole phase trace but still
+    # has outstanding reads in flight; the last completion re-arms the
+    # idle check instead of resuming issue
+    draining: bool = False
 
 
 @dataclass
@@ -567,6 +623,10 @@ class CCState:
     local: LRU
     m: Metrics
     comp_base: float
+    # this CC's MovementPolicy (per-CC heterogeneous systems, §2.9); always
+    # set at construction — the same object as Simulator.policy on
+    # homogeneous systems, so every dispatch site reads cc.policy
+    policy: object = None
     # per-CC compression-ratio RNG: each CC's (de)compression engine samples
     # its own stream, so the draw count of one CC (or scheme) cannot perturb
     # another CC's ratios through global event order
@@ -584,15 +644,34 @@ class Simulator:
         traces,
         workload: str = "",
         seed: int = 0,
+        footprints: Optional[Sequence[int]] = None,
     ):
-        """``scheme`` is a registered policy name (str) or a
-        :class:`MovementPolicy` instance (need not be registered)."""
+        """``scheme`` is a registered policy name (str), a
+        :class:`MovementPolicy` instance (need not be registered), or — for
+        per-CC heterogeneous systems (§2.9) — a sequence of either with one
+        entry per CC.  ``footprints`` (one per CC) overrides the
+        trace-derived footprint; required when a CC starts with empty
+        bootstrap traces (the serving layer assigns phases at run time)."""
         self.cfg = cfg
-        self.policy = get_policy(scheme)
-        self.scheme = self.policy.name
+        if isinstance(scheme, (list, tuple)):
+            self.policies: Optional[List] = [get_policy(s) for s in scheme]
+            if len(self.policies) != max(1, cfg.n_ccs):
+                raise ValueError(
+                    f"n_ccs={cfg.n_ccs} but {len(self.policies)} per-CC "
+                    f"policies given")
+            self.policy = self.policies[0]
+            names = [p.name for p in self.policies]
+            self.scheme = names[0] if len(set(names)) == 1 else "|".join(names)
+        else:
+            self.policies = None
+            self.policy = get_policy(scheme)
+            self.scheme = self.policy.name
         self.workload = workload
         self.eng = Engine()
         self.m = Metrics(scheme=self.scheme, workload=workload)
+        # serving hook (§2.9): called as on_core_idle(core, t) when a core
+        # has issued its whole trace and its outstanding reads have drained
+        self.on_core_idle: Optional[Callable[[Core, float], None]] = None
 
         # traces: List[Trace] (legacy, one CC) or List[List[Trace]] (one
         # group per CC).  A Trace is a tuple of ndarrays, so the first
@@ -604,6 +683,9 @@ class Simulator:
         if len(cc_traces) != max(1, cfg.n_ccs):
             raise ValueError(
                 f"n_ccs={cfg.n_ccs} but {len(cc_traces)} trace group(s) given")
+        if footprints is not None and len(footprints) != len(cc_traces):
+            raise ValueError(
+                f"n_ccs={cfg.n_ccs} but {len(footprints)} footprint(s) given")
 
         # per-CC workload assignment: 'pr' (all CCs) or a '+'-separated mix
         # ('pr+st') assigned round-robin across CCs
@@ -615,7 +697,8 @@ class Simulator:
         cid = itertools.count()
         for i, group in enumerate(cc_traces):
             w = parts[i % len(parts)]
-            footprint = int(max(int(tr[1].max()) + 64 for tr in group))
+            footprint = (int(footprints[i]) if footprints is not None
+                         else int(max(int(tr[1].max()) + 64 for tr in group)))
             cores = [
                 Core(next(cid), tr[0], tr[1] >> 6, tr[2],
                      LRU(llc_lines // max(1, len(group))), cc=i)
@@ -634,6 +717,7 @@ class Simulator:
             self.ccs.append(CCState(
                 idx=i, workload=w, cores=cores, local=local, m=m,
                 comp_base=compressibility_of(w if len(parts) > 1 else workload),
+                policy=(self.policies[i] if self.policies else self.policy),
                 rng=(np.random.default_rng(seed + 17) if i == 0
                      else np.random.default_rng((seed + 17, i))),
             ))
@@ -651,22 +735,39 @@ class Simulator:
         # net_lat unless cfg.uplink_bw enables the explicit uplink below).
         # Single-CC systems keep the legacy link classes (bit-identical);
         # multi-CC systems share each MC downlink across per-CC flows.  The
-        # policy's partitioning component picks the arbitration.
-        if self.policy.partitioning == "dual":
-            share = (cfg.line_share if self.policy.line_share is None
-                     else self.policy.line_share)
-            mk = (
-                (lambda s: DualQueueLink(self.eng, cfg.link_bw, share, s))
-                if n_ccs == 1
-                else (lambda s: SharedDualQueueLink(
-                    self.eng, cfg.link_bw, share, n_ccs, s))
-            )
+        # policy's partitioning component picks the arbitration; when CC
+        # policies disagree (heterogeneous partitioning, or dual flows with
+        # different line shares) the SharedHeteroLink arbitrates per flow,
+        # with the line class protected at the strictest (max) resolved
+        # share among the dual flows.
+        pols = self.policies if self.policies else [self.policy] * n_ccs
+
+        def _share_of(p) -> float:
+            return cfg.line_share if p.line_share is None else p.line_share
+
+        dl_parts = {p.partitioning for p in pols}
+        dl_shares = {_share_of(p) for p in pols}
+        if len(dl_parts) == 1 and (dl_parts == {"fifo"} or len(dl_shares) == 1):
+            if pols[0].partitioning == "dual":
+                share = _share_of(pols[0])
+                mk = (
+                    (lambda s: DualQueueLink(self.eng, cfg.link_bw, share, s))
+                    if n_ccs == 1
+                    else (lambda s: SharedDualQueueLink(
+                        self.eng, cfg.link_bw, share, n_ccs, s))
+                )
+            else:
+                mk = (
+                    (lambda s: FifoLink(self.eng, cfg.link_bw, s))
+                    if n_ccs == 1
+                    else (lambda s: SharedFifoLink(
+                        self.eng, cfg.link_bw, n_ccs, s))
+                )
         else:
-            mk = (
-                (lambda s: FifoLink(self.eng, cfg.link_bw, s))
-                if n_ccs == 1
-                else (lambda s: SharedFifoLink(self.eng, cfg.link_bw, n_ccs, s))
-            )
+            flow_dual = tuple(p.partitioning == "dual" for p in pols)
+            share = max(_share_of(p) for p in pols if p.partitioning == "dual")
+            mk = (lambda s: SharedHeteroLink(
+                self.eng, cfg.link_bw, share, flow_dual, s))
         self.links = [mk(s) for s in self.scheds]
 
         # per-MC CC->MC uplinks (§2.7): request packets ('line' class) +
@@ -678,7 +779,12 @@ class Simulator:
         else:
             ubw = cfg.uplink_bw
             req_share = 1.0 - cfg.writeback_share
-            if self.policy.uplink_partitioning == "dual":
+            up_parts = {p.uplink_partitioning for p in pols}
+            if len(up_parts) > 1:
+                up_dual = tuple(p.uplink_partitioning == "dual" for p in pols)
+                mku = (lambda s: SharedHeteroLink(
+                    self.eng, ubw, req_share, up_dual, s))
+            elif pols[0].uplink_partitioning == "dual":
                 mku = (
                     (lambda s: DualQueueLink(self.eng, ubw, req_share, s))
                     if n_ccs == 1
@@ -756,6 +862,27 @@ class Simulator:
                 t += lat
         core.t = t
         core.t_end = max(core.t_end, t)
+        if self.on_core_idle is not None:
+            self._maybe_idle(core, t)
+
+    def _maybe_idle(self, core: Core, t: float):
+        """Serving hook (§2.9): fire ``on_core_idle`` once per phase, after
+        the core has issued its whole trace AND its outstanding reads have
+        drained.  Write misses do not block idleness (write-release
+        semantics: their fills land through the normal arrival paths).
+        Safe against stale deferred events — a newly assigned phase resets
+        ``idx`` and the guard below skips the fire."""
+        if self.on_core_idle is None or core.idx < len(core.addrs):
+            return
+        while core.outstanding and core.outstanding[0].done:
+            core.outstanding.popleft()
+        if core.outstanding:
+            core.draining = True  # _complete re-arms the check
+            return
+        core.draining = False
+        t = max(t, core.t)
+        core.t_end = max(core.t_end, t)
+        self.on_core_idle(core, t)
 
     def _complete(self, req: Request, t: float):
         req.done = True
@@ -764,6 +891,9 @@ class Simulator:
         core = req.core
         if core.stalled and core.outstanding and core.outstanding[0].done:
             self.eng.at(t, lambda tt, c=core: self.core_step(c, tt))
+        elif core.draining:
+            core.draining = False
+            self.eng.at(t, lambda tt, c=core: self._maybe_idle(c, tt))
 
     def _fill_line(self, core: Core, line: int, dirty: bool):
         core.llc.insert(line, dirty)
@@ -784,8 +914,9 @@ class Simulator:
     def miss(self, cc: CCState, core: Core, line: int, wr: bool, t: float) -> Optional[float]:
         """LLC-miss path, dispatched on the policy's *components* (DESIGN.md
         §2.6) — never on policy names, so new registered compositions need
-        no edits here."""
-        pol = self.policy
+        no edits here.  The policy is the CC's own (per-CC heterogeneous
+        systems, §2.9; the shared object on homogeneous ones)."""
+        pol = cc.policy
         gran = pol.granularity
         page = self.page_of(line)
 
@@ -894,7 +1025,7 @@ class Simulator:
         # is streaming, so only the pipeline fill (~1/4 of the full pass)
         # sits on the critical path; the rest overlaps transmission.
         _, pu = self._buf_utils(cc)
-        if (self.policy.compression != "off" and cfg.compress
+        if (cc.policy.compression != "off" and cfg.compress
                 and pu > self.PAGE_FAST):
             ratio = self.comp_ratio(cc)
             size = cfg.page_bytes / ratio + cfg.header_bytes
@@ -928,7 +1059,7 @@ class Simulator:
         size = raw
         extra = 0.0
         cc.m.writebacks += 1
-        compress = self.policy.compression != "off" and cfg.compress
+        compress = cc.policy.compression != "off" and cfg.compress
         if self.uplinks is None:
             link = self.links[mc]
             _, pu = self._buf_utils(cc)
@@ -992,7 +1123,7 @@ class Simulator:
         ``page_throttle_hi``; full buffers park the request in the retry
         queue).  ``page_carries_requests=False`` is the legacy 'both' race:
         the line always carries the request, the page is pure prefetch."""
-        cfg, pol = self.cfg, self.policy
+        cfg, pol = self.cfg, cc.policy
         adaptive = pol.granularity == "adaptive"
         page = self.page_of(line)
         req = self._mk_req(core, line, wr, t)
@@ -1079,9 +1210,9 @@ class Simulator:
                 cc.retry.append(req)
 
     # ---------------- run ----------------
-    def run(self) -> Metrics:
+    def run(self, until: Optional[float] = None) -> Metrics:
         self.start()
-        self.eng.run()
+        self.eng.run(until=until)
         for cc in self.ccs:
             cc.m.cycles = max(c.t_end for c in cc.cores)
         if len(self.ccs) == 1:

@@ -250,3 +250,20 @@ register_policy(MovementPolicy(
     compression="off", throttle=False,
     description="page scheme on the dual-queue link (no line traffic, so "
                 "effectively the FIFO page scheme — a null ablation)"))
+
+# serving-pool compositions (DESIGN.md §2.9): per-CC heterogeneous policy
+# assignment for disaggregated prefill/decode routers.  Prefill-pool CCs
+# stream page-dense KV-fill bursts — a low line share lets the bulk class
+# drain; decode-pool CCs are latency-critical — a high line share protects
+# their critical lines against the prefill pool's page bursts on the
+# shared downlink (SharedHeteroLink uses the max share among dual flows).
+register_policy(MovementPolicy(
+    name="daemon_prefill", granularity="adaptive", partitioning="dual",
+    compression="link", throttle=True, line_share=0.35,
+    description="daemon tuned for prefill-pool CCs: bulk-friendly low "
+                "line share"))
+register_policy(MovementPolicy(
+    name="daemon_decode", granularity="adaptive", partitioning="dual",
+    compression="link", throttle=True, line_share=0.75,
+    description="daemon tuned for decode-pool CCs: latency-protecting "
+                "high line share"))

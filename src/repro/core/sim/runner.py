@@ -482,6 +482,137 @@ def fig8_kernels(
     return rows
 
 
+# the fig9 serving grid (DESIGN.md §2.9): request-level tail latency under
+# open-loop load.  Two tenant profiles share the sweep machinery:
+#   llm   — prefill = one fa_prefill burst, decode = fa_decode slices (the
+#           captured Pallas streams; page-dense, so page granularity serves
+#           tails well and daemon correctly converges to ~1x)
+#   graph — a graph-analytics tenant issuing query requests (the paper's
+#           'pr' source as both phases; sparse irregular gathers, where
+#           page-granularity tails collapse under load and daemon's
+#           adaptive movement wins p99 by >10x)
+# The pair is the request-level restatement of the paper's robustness
+# claim "across application characteristics".
+SERVING_TENANTS = {
+    "llm": ("fa_prefill", "fa_decode"),
+    "graph": ("pr", "pr"),
+}
+SERVING_LOADS = (8.0, 16.0, 24.0)  # offered load, requests per Mcycle
+SERVING_ROUTERS = ("round_robin", "least_loaded", "disagg_prefill")
+
+
+def fig9_serving_spec(
+    loads: Iterable[float] = SERVING_LOADS,
+    routers: Iterable[str] = SERVING_ROUTERS,
+    schemes: Iterable[str] = ("page", "daemon"),
+    *,
+    tenant: str = "llm",
+    cfg: Optional[SimConfig] = None,
+    n_requests: int = 48,
+    prefill_accesses: int = 1024,
+    decode_steps: int = 4,
+    decode_accesses: int = 256,
+    **kw,
+) -> Sweep:
+    """The canonical serving grid (DESIGN.md §2.9) for one tenant profile:
+    offered load x router policy x scheme, on a 4-CC node with a congested
+    downlink (1/8 bus bandwidth) and an asymmetric contended uplink.  The
+    sweep name is ``fig9_serving_<tenant>``; shared by the API and
+    benchmarks/fig9_serving.py so each BENCH_sim.json entry has one
+    meaning."""
+    if tenant not in SERVING_TENANTS:
+        raise KeyError(f"unknown serving tenant {tenant!r}; "
+                       f"choose from {sorted(SERVING_TENANTS)}")
+    pre, dec = SERVING_TENANTS[tenant]
+    base = cfg or SimConfig(n_ccs=4, link_bw_frac=0.125, uplink_bw=1.0)
+    base = base.with_(
+        prefill_workload=pre, decode_workload=dec, n_requests=n_requests,
+        prefill_accesses=prefill_accesses, decode_steps=decode_steps,
+        decode_accesses=decode_accesses)
+    axes = {
+        "offered_load": tuple(loads),
+        "serving_router": tuple(routers),
+        "scheme": tuple(schemes),
+    }
+    return Sweep(name=f"fig9_serving_{tenant}", axes=axes, base=base,
+                 **_sweep_kw(kw))
+
+
+def fig9_tails(res: SweepResult, tenant: str) -> tuple:
+    """Derived tail statistics from an executed fig9 grid: per (load,
+    router) rows with p50/p99/goodput for page and daemon, a per-load
+    geomean row, and the gated derived keys
+    ``daemon_vs_page_p99@load=<L>:tenant=<T>`` (geomean over routers of
+    page_p99/daemon_p99 — >1 means daemon serves the tail better).  The
+    single source of the fig9 derived numbers — shared by
+    :func:`fig9_serving` and benchmarks/fig9_serving.py so the CI-gated
+    ledger values and the public API cannot diverge."""
+    g = res.grid("offered_load", "serving_router", "scheme")
+    rows: List[dict] = []
+    derived: Dict[str, float] = {}
+    for load in res.axes["offered_load"]:
+        ratios = []
+        for router in res.axes["serving_router"]:
+            mp = g[(load, router, "page")].metrics
+            md = g[(load, router, "daemon")].metrics
+            ratio = mp.request_p99 / max(md.request_p99, 1e-9)
+            ratios.append(ratio)
+            rows.append(
+                {
+                    "tenant": tenant,
+                    "offered_load": load,
+                    "router": router,
+                    "p99_ratio": ratio,
+                    "page_p99": mp.request_p99,
+                    "daemon_p99": md.request_p99,
+                    "page_p50": mp.request_p50,
+                    "daemon_p50": md.request_p50,
+                    "page_goodput": mp.goodput,
+                    "daemon_goodput": md.goodput,
+                    "completed": (mp.requests_completed,
+                                  md.requests_completed),
+                }
+            )
+        gm = geomean(ratios)
+        derived[f"daemon_vs_page_p99@load={load:g}:tenant={tenant}"] = gm
+        rows.append({"tenant": tenant, "offered_load": load,
+                     "router": "geomean", "p99_ratio": gm})
+    return rows, derived
+
+
+def fig9_serving(
+    loads: Iterable[float] = SERVING_LOADS,
+    routers: Iterable[str] = SERVING_ROUTERS,
+    schemes: Iterable[str] = ("page", "daemon"),
+    *,
+    tenants: Iterable[str] = ("llm", "graph"),
+    cfg: Optional[SimConfig] = None,
+    workers: Optional[int] = None,
+    n_requests: int = 48,
+    prefill_accesses: int = 1024,
+    decode_steps: int = 4,
+    decode_accesses: int = 256,
+    **kw,
+) -> List[dict]:
+    """Request tail latency under open-loop load: one sweep per tenant
+    profile, rows per (tenant, load, router) with page/daemon p50/p99/
+    goodput plus per-load p99-ratio geomeans.  The headline mirrors fig8's
+    at the request level: on the captured LLM kernel streams page
+    granularity already serves tails well (ratios ~1x), while the sparse
+    graph tenant's p99 collapses under page-granularity movement and
+    daemon wins the tail by an order of magnitude."""
+    rows: List[dict] = []
+    for tenant in tenants:
+        sw = fig9_serving_spec(
+            loads, routers, schemes, tenant=tenant, cfg=cfg,
+            n_requests=n_requests, prefill_accesses=prefill_accesses,
+            decode_steps=decode_steps, decode_accesses=decode_accesses,
+            **dict(kw))
+        t_rows, _ = fig9_tails(run_sweep(sw, workers=workers), tenant)
+        rows += t_rows
+    return rows
+
+
 def paper_claims(
     bw_fracs: Iterable[float] = (0.25, 0.125),
     *,

@@ -34,6 +34,7 @@ from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 from repro.core.sim.config import Metrics, SimConfig
 from repro.core.sim.engine import simulate
 from repro.core.sim.policy import MovementPolicy, get_policy
+from repro.core.sim.serving import get_router, serve_one
 from repro.core.sim.trace import generate, get_workload
 
 BENCH_SCHEMA = "repro.sim.sweep/v1"
@@ -78,6 +79,11 @@ def run_one(
     single-CC model exactly."""
     cfg = cfg or SimConfig()
     scheme = get_policy(scheme)  # fail fast on unknown policy names
+    if cfg.serving_router is not None:
+        # open-loop serving cell (DESIGN.md §2.9): the request layer builds
+        # its own phase traces from cfg.{prefill,decode}_* — ``workload``,
+        # ``n_accesses``, ``footprint`` and ``n_jobs`` do not apply
+        return serve_one(cfg, scheme, seed=seed)
     n_ccs = max(1, cfg.n_ccs)
     parts = tuple(workload.split("+")) if workload else (workload,)
     for p in parts:  # fail fast on unknown workload names
@@ -150,6 +156,9 @@ class Sweep:
         for mix in self.axes.get("workload", ()):
             for part in mix.split("+"):
                 get_workload(part)
+        for r in self.axes.get("serving_router", ()):
+            if r is not None:
+                get_router(r)
         object.__setattr__(self, "axes", {k: tuple(v) for k, v in self.axes.items()})
 
     def cells(self) -> List[Dict[str, Any]]:

@@ -163,9 +163,17 @@ def replay_slice(trace: Trace, seed: int, n: int) -> Trace:
     """The replay view shared by ``.npz`` trace files and captured kernel
     workloads (repro.capture): ``n`` truncates or tiles the trace and
     ``seed`` rotates the starting offset so multiple threads replay the
-    same trace out of phase rather than in lockstep."""
+    same trace out of phase rather than in lockstep.  A window larger than
+    the trace wraps (tiles); ``n < 1`` or an empty trace fails fast — a
+    zero-length replay window is always a caller bug (e.g. a serving phase
+    with no accesses), and silently returning empty arrays would shift the
+    replay phase of every later slice."""
     gaps, addrs, writes = trace
     total = len(addrs)
+    if n < 1 or total == 0:
+        raise ValueError(
+            f"replay_slice: need n >= 1 and a non-empty trace "
+            f"(got n={n}, trace length {total})")
     roll = (seed * 9973) % total
     idx = (np.arange(n, dtype=np.int64) + roll) % total
     return gaps[idx], addrs[idx], writes[idx]

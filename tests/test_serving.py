@@ -1,0 +1,387 @@
+"""Serving-layer tests (DESIGN.md §2.9): determinism parity under the
+process-pool sweep, request conservation and phase-ordering invariants
+(hypothesis where installed, a deterministic fallback sampler otherwise),
+replay-slice edge semantics, router/pool wiring, and the legacy-parity
+lock — ``serving_router=None`` keeps all six schemes bit-identical to the
+committed GOLD/GOLD_MCC goldens."""
+import math
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core.sim import (
+    Metrics,
+    SimConfig,
+    Sweep,
+    available_routers,
+    build_requests,
+    get_router,
+    request_arrivals,
+    run_one,
+    run_sweep,
+    serve_one,
+)
+from repro.core.sim.engine import Engine, SharedHeteroLink
+from repro.core.sim.serving import ServingScheduler
+from repro.core.sim.trace import generate, replay_slice
+
+from test_multicc import GOLD, GOLD_MCC, N
+
+# --------------------------------------------------------------------------
+# hypothesis-or-fallback shim: the property tests below PASS either way.
+# With hypothesis installed they get real shrinking/coverage; without it a
+# deterministic sampler (seeded per test name) drives the same strategies
+# through a fixed number of examples.
+# --------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # no pip install available: run the fallback sampler
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _St:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+    st = _St()
+
+    def settings(max_examples=6, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            n_ex = getattr(fn, "_max_examples", 6)
+
+            def wrapper():
+                rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+                for _ in range(n_ex):
+                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+
+# small/fast serving cell: synthetic streaming phases, 2 CCs
+def _cfg(**kw):
+    base = dict(
+        n_ccs=2, link_bw_frac=0.5, serving_router="round_robin",
+        n_requests=6, offered_load=40.0,
+        prefill_workload="st", decode_workload="st",
+        prefill_accesses=128, decode_steps=2, decode_accesses=64,
+    )
+    base.update(kw)
+    return SimConfig(**base)
+
+
+# --------------------------------------------------------------------------
+# determinism
+# --------------------------------------------------------------------------
+
+
+def test_cross_run_determinism_bit_identical():
+    """Same (cfg, scheme, seed) -> bit-identical per-request records, run
+    after run in one process (fresh Simulator + fresh RNG state each
+    time)."""
+    cfg = _cfg(serving_router="least_loaded")
+    a = serve_one(cfg, "daemon", seed=7)
+    b = serve_one(cfg, "daemon", seed=7)
+    assert a.requests == b.requests
+    assert (a.request_p50, a.request_p99, a.goodput) == \
+           (b.request_p50, b.request_p99, b.goodput)
+    c = serve_one(cfg, "daemon", seed=8)  # and the seed actually matters
+    assert c.requests != a.requests
+
+
+def test_sweep_serial_parallel_parity():
+    """A serving sweep is cell-for-cell bit-identical between the serial
+    runner and the process pool (the PR 1 parity lock, extended to the
+    request layer: per-request completion cycles included)."""
+    sw = Sweep(
+        name="serving_parity",
+        axes={
+            "offered_load": (20.0, 60.0),
+            "serving_router": ("round_robin", "disagg_prefill"),
+            "scheme": ("cacheline", "daemon"),
+        },
+        base=_cfg(),
+    )
+    serial = run_sweep(sw, workers=1)
+    pooled = run_sweep(sw, workers=4)
+    assert len(serial) == len(pooled) == 8
+    for rs, rp in zip(serial.rows, pooled.rows):
+        assert rs.axes == rp.axes
+        assert rs.metrics.requests == rp.metrics.requests
+        assert rs.metrics.as_dict() == rp.metrics.as_dict()
+
+
+def test_request_metrics_survive_ledger_round_trip():
+    """Metrics.as_dict()/from_dict preserves the serving rollup (the
+    BENCH_sim.json path for fig9 rows)."""
+    m = serve_one(_cfg(), "daemon", seed=3)
+    m2 = Metrics.from_dict(m.as_dict())
+    assert m2.requests == m.requests
+    assert m2.request_p99 == m.request_p99
+    assert m2.requests_completed == m.requests_completed
+
+
+# --------------------------------------------------------------------------
+# property tests (hypothesis or the fallback sampler)
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    load=st.floats(5.0, 150.0),
+    router=st.sampled_from(("round_robin", "least_loaded", "disagg_prefill")),
+    scheme=st.sampled_from(("cacheline", "daemon")),
+    seed=st.integers(0, 50),
+)
+def test_request_conservation_at_drain(load, router, scheme, seed):
+    """With no horizon the system drains: every offered request completes
+    exactly once, with a monotone per-request lifecycle
+    arrival <= t_start <= t_prefill_done <= t_done."""
+    cfg = _cfg(offered_load=load, serving_router=router)
+    m = serve_one(cfg, scheme, seed=seed)
+    assert m.requests_completed == m.requests_offered == cfg.n_requests
+    rids = [r["rid"] for r in m.requests]
+    assert sorted(rids) == list(range(cfg.n_requests))  # none dup/dropped
+    for r in m.requests:
+        assert r["arrival"] <= r["t_start"] <= r["t_prefill_done"] <= r["t_done"]
+        assert r["latency"] > 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    load=st.floats(10.0, 100.0),
+    horizon=st.floats(5e4, 4e5),
+    seed=st.integers(0, 50),
+)
+def test_request_conservation_at_horizon(load, horizon, seed):
+    """A horizon cut partitions the offered requests exactly into
+    completed / in-flight / not-yet-arrived — none duplicated, none lost,
+    and un-arrived records are exactly those whose arrival lies past the
+    horizon."""
+    cfg = _cfg(offered_load=load, serving_horizon=horizon)
+    m = serve_one(cfg, "daemon", seed=seed)
+    completed = [r for r in m.requests if not math.isnan(r["t_done"])]
+    inflight = [r for r in m.requests
+                if r["prefill_cc"] >= 0 and math.isnan(r["t_done"])]
+    unarrived = [r for r in m.requests if r["prefill_cc"] < 0]
+    assert len(completed) + len(inflight) + len(unarrived) == cfg.n_requests
+    assert len(completed) == m.requests_completed
+    assert sorted(r["rid"] for r in m.requests) == list(range(cfg.n_requests))
+    for r in unarrived:
+        assert r["arrival"] > horizon
+    for r in completed + inflight:
+        assert r["arrival"] <= horizon
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    load=st.floats(5.0, 150.0),
+    router=st.sampled_from(("round_robin", "least_loaded", "disagg_prefill")),
+    scheme=st.sampled_from(("cacheline", "daemon")),
+    seed=st.integers(0, 50),
+)
+def test_tail_ordering_p99_p50_min(load, router, scheme, seed):
+    """p99 >= p50 >= the fastest request's latency, which itself can never
+    beat an uncontended single-phase service time (> 0)."""
+    cfg = _cfg(offered_load=load, serving_router=router)
+    m = serve_one(cfg, scheme, seed=seed)
+    lats = [r["latency"] for r in m.requests]
+    assert m.request_p99 >= m.request_p50 >= min(lats) > 0
+    assert max(lats) >= m.request_p99
+
+
+# --------------------------------------------------------------------------
+# routers, pools, heterogeneous policies
+# --------------------------------------------------------------------------
+
+
+def test_disagg_pools_and_phase_placement():
+    """disagg_prefill splits the CCs into disjoint pools; every request
+    prefills in the prefill pool and decodes in the decode pool."""
+    cfg = _cfg(n_ccs=4, serving_router="disagg_prefill", n_requests=8)
+    sched = ServingScheduler(cfg, "daemon", seed=2)
+    assert set(sched.prefill_pool).isdisjoint(sched.decode_pool)
+    assert set(sched.prefill_pool) | set(sched.decode_pool) == set(range(4))
+    m = sched.run()
+    assert m.requests_completed == 8
+    for r in m.requests:
+        assert r["prefill_cc"] in sched.prefill_pool
+        assert r["decode_cc"] in sched.decode_pool
+
+
+def test_router_registry_fails_fast():
+    """Unknown routers fail fast at every entry point: get_router, the
+    serving cell itself, and Sweep axis validation at declaration time."""
+    assert set(available_routers()) >= {
+        "round_robin", "least_loaded", "disagg_prefill"}
+    with pytest.raises(KeyError, match="nonesuch"):
+        get_router("nonesuch")
+    with pytest.raises(KeyError, match="nonesuch"):
+        run_one("st", "daemon", _cfg(serving_router="nonesuch"))
+    with pytest.raises(KeyError, match="nonesuch"):
+        Sweep(name="bad", axes={"serving_router": ("nonesuch",)}, base=_cfg())
+    with pytest.raises(ValueError, match="n_ccs >= 2"):
+        serve_one(_cfg(n_ccs=1, serving_router="disagg_prefill"), "daemon")
+
+
+def test_heterogeneous_pool_policies():
+    """Per-pool MovementPolicy overrides run (prefill pool on a bulk-share
+    policy, decode pool on a line-protecting one) and are rejected for
+    routers whose pools share CCs."""
+    cfg = _cfg(n_ccs=4, serving_router="disagg_prefill",
+               serving_prefill_policy="daemon_prefill",
+               serving_decode_policy="daemon_decode")
+    m = serve_one(cfg, "daemon", seed=1)
+    assert m.requests_completed == cfg.n_requests
+    assert m.scheme == "daemon_prefill|daemon_prefill|daemon_decode|daemon_decode"
+    with pytest.raises(ValueError, match="disjoint pools"):
+        serve_one(cfg.with_(serving_router="round_robin"), "daemon")
+
+
+def test_serving_cell_routes_through_run_one():
+    """run_one with serving_router set IS the serving cell (the sweep
+    engine needs no special-casing beyond the config field)."""
+    cfg = _cfg()
+    a = run_one("ignored-label", "daemon", cfg, seed=5)
+    b = serve_one(cfg, "daemon", seed=5)
+    assert a.requests == b.requests
+
+
+# --------------------------------------------------------------------------
+# replay_slice edge semantics (decode stepping)
+# --------------------------------------------------------------------------
+
+
+def _toy_trace(n=10):
+    gaps = np.arange(n, dtype=np.int64)
+    addrs = (np.arange(n, dtype=np.int64) + 1) * 64
+    writes = np.zeros(n, bool)
+    return gaps, addrs, writes
+
+
+def test_replay_slice_window_wraps_and_tiles():
+    """A window spanning the trace end wraps to the start; n > len tiles
+    the whole trace."""
+    tr = _toy_trace(10)
+    # seed=1 -> roll 9973 % 10 = 3: window [3..10) then wraps to [0..3)
+    g, a, w = replay_slice(tr, seed=1, n=10)
+    assert list(a // 64) == [4, 5, 6, 7, 8, 9, 10, 1, 2, 3]
+    g, a, w = replay_slice(tr, seed=0, n=25)  # tiles 2.5x
+    assert list(a[:10]) == list(a[10:20])
+    assert len(a) == 25 and list(a[20:]) == list(a[:5])
+
+
+def test_replay_slice_fails_fast_on_degenerate_windows():
+    tr = _toy_trace(10)
+    with pytest.raises(ValueError, match="n >= 1"):
+        replay_slice(tr, seed=0, n=0)
+    empty = (np.zeros(0, np.int64), np.zeros(0, np.int64), np.zeros(0, bool))
+    with pytest.raises(ValueError, match="non-empty"):
+        replay_slice(empty, seed=0, n=4)
+
+
+def test_captured_slices_deterministic_per_workload():
+    """Captured-kernel decode slices are a pure function of (workload,
+    seed, n) — the per-request phase traces the serving layer schedules
+    cannot silently shift replay phase between builds."""
+    for wl in ("fa_prefill", "fa_decode"):
+        a = generate(wl, seed=11, footprint=1 << 24, n=256)
+        b = generate(wl, seed=11, footprint=1 << 24, n=256)
+        c = generate(wl, seed=12, footprint=1 << 24, n=256)
+        assert all(np.array_equal(x, y) for x, y in zip(a, b))
+        assert not np.array_equal(a[1], c[1])  # seed rotates the window
+    reqs = build_requests(_cfg(prefill_workload="fa_prefill",
+                               decode_workload="fa_decode"), seed=4)
+    reqs2 = build_requests(_cfg(prefill_workload="fa_prefill",
+                                decode_workload="fa_decode"), seed=4)
+    for r, r2 in zip(reqs, reqs2):
+        assert r.arrival == r2.arrival
+        for p, p2 in zip(r.phases, r2.phases):
+            assert all(np.array_equal(x, y) for x, y in zip(p, p2))
+
+
+def test_arrivals_are_open_loop_and_seeded():
+    """The arrival process is strictly increasing, scheme-independent, and
+    scales with offered load (a pure function of (cfg, seed))."""
+    cfg = _cfg(n_requests=32)
+    a = request_arrivals(cfg, seed=9)
+    assert np.all(np.diff(a) > 0) and np.all(a > 0)
+    assert np.array_equal(a, request_arrivals(cfg, seed=9))
+    dense = request_arrivals(cfg.with_(offered_load=400.0), seed=9)
+    assert dense[-1] < a[-1]  # higher load -> compressed arrivals
+
+
+# --------------------------------------------------------------------------
+# engine seam: the heterogeneous shared link
+# --------------------------------------------------------------------------
+
+
+def test_shared_hetero_link_conserves_transfers():
+    """Every transfer on the mixed fifo/dual shared link completes exactly
+    once, whatever the (flow, class) interleaving — the conservation
+    invariant the per-CC-policy downlink construction relies on."""
+    for flow_dual in ((True, False), (False, True, True), (True, True),
+                      (False, False)):
+        eng = Engine()
+        link = SharedHeteroLink(eng, 4.0, 0.6, flow_dual)
+        done = []
+        k = 0
+        for f in range(len(flow_dual)):
+            for cls in ("line", "page"):
+                for j in range(3):
+                    eng.at(0.5 * k, lambda t, s=64 + 128 * j, ff=f, c=cls,
+                           i=k: link.send(t, s, lambda a: done.append(i),
+                                          c, ff))
+                    k += 1
+        eng.run()
+        assert sorted(done) == list(range(k))
+
+
+# --------------------------------------------------------------------------
+# legacy parity: the request layer is pay-for-play
+# --------------------------------------------------------------------------
+
+
+def test_legacy_golden_parity_all_schemes():
+    """serving_router=None (the default) keeps every committed golden
+    bit-identical across all six schemes, single- and multi-CC — the
+    request layer costs nothing unless a cell opts in."""
+    assert SimConfig().serving_router is None
+    for key, exp in GOLD.items():
+        w, s = key.split("/")
+        m = run_one(w, s, SimConfig(link_bw_frac=0.25), seed=1, n_accesses=N)
+        for name, v in exp.items():
+            assert getattr(m, name) == v, (key, name)
+    cfg = SimConfig(link_bw_frac=0.25, n_ccs=2)
+    for key, exp in GOLD_MCC.items():
+        w, s = key.split("/")
+        m = run_one(w, s, cfg, seed=1, n_accesses=N)
+        for name, v in exp.items():
+            assert getattr(m, name) == v, (key, name)
