@@ -5,8 +5,8 @@ against the committed baseline, section by section, with a relative
 tolerance (default 5%).  The committed BENCH_sim.json is the output of the
 exact CI command::
 
-    PYTHONPATH=src python benchmarks/run.py --quick \
-        --only fig2,fig4_top,fig4_bottom,sweep_jitter,sweep_nmcs,fig5,fig6,fig7,fig7_wshare,fig8,fig9
+    PYTHONPATH=src python benchmarks/run.py --quick --engine batch \
+        --only fig2,fig4_top,fig4_bottom,sweep_jitter,sweep_nmcs,fig5,fig6,fig7,fig7_wshare,fig8,fig9,engine_bench
 
 so CI can regenerate it deterministically and fail the workflow when a
 code change moves any geomean by more than the tolerance — in EITHER
@@ -14,7 +14,10 @@ direction: a >5% improvement means the committed ledger is stale and must
 be regenerated alongside the change.  Gated keys are the derived
 ``daemon_vs_page_geomean*`` entries, the fig6 ablation
 ``policy_vs_page_geomean@<policy>`` entries, and the fig9 serving tail
-ratios ``daemon_vs_page_p99@load=<L>:tenant=<T>``.
+ratios ``daemon_vs_page_p99@load=<L>:tenant=<T>``.  The ``wall_*``
+throughput keys (and the ``engine``/``workers``/``wall_s`` entry fields)
+are observability-only and never gated; ``--trend`` extracts them into
+the nightly throughput-trend CSV.
 
 Comparisons are refused (exit 1) when a section's sweep spec — axes,
 n_accesses, footprint, seeding, base SimConfig — differs between baseline
@@ -30,15 +33,68 @@ Usage (CI copies the committed ledger aside before re-running benchmarks)::
 from __future__ import annotations
 
 import argparse
+import csv
 import json
+import os
 import sys
 
 GATED_PREFIXES = ("daemon_vs_page_geomean", "policy_vs_page_geomean",
                   "daemon_vs_page_p99")
 
+# observability-only derived keys (wall-clock, throughput): recorded in every
+# ledger entry, charted by the nightly trend artifact, never gated
+WALL_PREFIX = "wall_"
+
 
 def _gated(key: str) -> bool:
     return key.startswith(GATED_PREFIXES)
+
+
+def write_trend(sweeps: dict, path: str) -> int:
+    """Extract the non-gated ``wall_*`` throughput keys into a flat CSV
+    (section, engine, workers, n_cells, wall_s, cells_per_s, cpu_s_per_cell)
+    — the nightly throughput-trend artifact.  Returns the row count."""
+    rows = []
+    for name in sorted(sweeps):
+        entry = sweeps[name]
+        d = entry.get("derived", {})
+        rows.append({
+            "section": name,
+            "engine": entry.get("engine", "python"),
+            "workers": entry.get("workers", 1),
+            "n_cells": entry.get("n_cells", len(entry.get("rows", []))),
+            "wall_s": d.get("wall_s", entry.get("wall_s", "")),
+            "cells_per_s": d.get("wall_cells_per_s", ""),
+            "cpu_s_per_cell": d.get("wall_cpu_s_per_cell", ""),
+        })
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]) if rows else
+                           ["section"])
+        w.writeheader()
+        w.writerows(rows)
+    return len(rows)
+
+
+def write_step_summary(rows: list) -> None:
+    """Render the gate comparison as a markdown table into
+    ``$GITHUB_STEP_SUMMARY`` (no-op outside Actions) so geomean drift is
+    readable from the run page without downloading artifacts."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = ["## Benchmark-regression gate", "",
+             "| section / key | baseline | fresh | rel | status |",
+             "|---|---:|---:|---:|---|"]
+    for name, key, base, new, rel, status in rows:
+        mark = "✅" if status == "ok" else "❌"
+        if base is None or new is None:
+            lines.append(f"| {name}/{key or '<section>'} | — | — | — | "
+                         f"{mark} {status} |")
+        else:
+            lines.append(f"| {name}/{key} | {base:.4f} | {new:.4f} | "
+                         f"{rel:+.2%} | {mark} {status} |")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
 
 
 def load_sweeps(path: str) -> dict:
@@ -90,8 +146,9 @@ def compare(baseline: dict, fresh: dict, tol: float,
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", required=True,
-                    help="committed BENCH_sim.json (copied aside before re-running)")
+    ap.add_argument("--baseline",
+                    help="committed BENCH_sim.json (copied aside before "
+                         "re-running); optional when only --trend is wanted")
     ap.add_argument("--fresh", required=True,
                     help="freshly produced BENCH_sim.json")
     ap.add_argument("--tolerance", type=float, default=0.05,
@@ -99,15 +156,27 @@ def main() -> None:
     ap.add_argument("--sections", default="",
                     help="comma-separated sweep names to gate "
                          "(default: every baseline section with gated keys)")
+    ap.add_argument("--trend", default="",
+                    help="also write the wall_* throughput keys of --fresh "
+                         "to this CSV (the nightly trend artifact)")
     args = ap.parse_args()
     sections = [s.strip() for s in args.sections.split(",") if s.strip()] or None
 
-    baseline = load_sweeps(args.baseline)
     fresh = load_sweeps(args.fresh)
+    if args.trend:
+        n = write_trend(fresh, args.trend)
+        print(f"throughput trend: {n} section(s) -> {args.trend}")
+    if not args.baseline:
+        if not args.trend:
+            ap.error("--baseline is required unless --trend is given")
+        return
+
+    baseline = load_sweeps(args.baseline)
     failures = 0
     checked = 0
-    for name, key, base, new, rel, status in compare(
-            baseline, fresh, args.tolerance, sections):
+    rows = list(compare(baseline, fresh, args.tolerance, sections))
+    write_step_summary(rows)
+    for name, key, base, new, rel, status in rows:
         if status == "ok":
             checked += 1
             print(f"OK    {name}/{key}: {base:.4f} -> {new:.4f} ({rel:+.2%})")

@@ -1,0 +1,66 @@
+"""Engine parity + throughput benchmark: batch core vs Python oracle.
+
+Runs the canonical fig2 grid twice — once per engine, both serial so the
+comparison is per-process apples-to-apples — asserts the batch engine is
+cell-for-cell bit-identical to the oracle, and records the measured
+speedup in the ledger under the non-gated ``wall_*`` keys (the
+``engine_bench`` section).  CI runs this in quick mode; nightly at full
+size, so engine-throughput regressions show up in the trend artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core.sim import run_sweep, write_bench
+
+from benchmarks import BENCH_PATH
+from benchmarks.fig2_schemes import build_sweep
+
+
+def run(n_accesses: int = 20_000, workers: int | None = None,
+        bench_path: str = BENCH_PATH):
+    # renamed so the ledger entry does not clobber the fig2 section
+    sw = dataclasses.replace(build_sweep(n_accesses), name="engine_bench")
+    oracle = run_sweep(sw, workers=1, engine="python")
+    batch = run_sweep(sw, workers=1, engine="batch")
+    mismatches = [
+        a.axes for a, b in zip(oracle.rows, batch.rows)
+        if a.metrics.as_dict() != b.metrics.as_dict() or a.seed != b.seed
+    ]
+    if mismatches:
+        raise AssertionError(
+            f"batch engine diverged from the oracle on {len(mismatches)} "
+            f"cell(s), first: {mismatches[0]!r}")
+    speedup = oracle.wall_s / max(batch.wall_s, 1e-9)
+    per_call = batch.us_per_call
+    write_bench(bench_path, batch, derived={
+        "wall_python_s": round(oracle.wall_s, 4),
+        "wall_batch_s": round(batch.wall_s, 4),
+        "wall_speedup_vs_python": round(speedup, 4),
+        "parity_cells": len(batch.rows),
+    })
+    return [
+        ("engine_bench/parity", per_call,
+         f"identical=True;cells={len(batch.rows)}"),
+        ("engine_bench/speedup", per_call,
+         f"speedup={speedup:.2f}x;python_s={oracle.wall_s:.2f};"
+         f"batch_s={batch.wall_s:.2f}"),
+    ]
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-accesses", type=int, default=20_000)
+    args = ap.parse_args()
+    for tag, us, derived in run(n_accesses=args.n_accesses):
+        print(f"{tag},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

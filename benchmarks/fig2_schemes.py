@@ -37,10 +37,11 @@ def build_sweep(n_accesses: int = 20_000, link_bw_frac: float = 0.25) -> Sweep:
 
 
 def run(n_accesses: int = 20_000, link_bw_frac: float = 0.25,
-        workers: int | None = None, bench_path: str = BENCH_PATH):
+        workers: int | None = None, engine: str = "python",
+        bench_path: str = BENCH_PATH):
     workers = default_workers() if workers is None else workers
     sw = build_sweep(n_accesses, link_bw_frac)
-    res = run_sweep(sw, workers=workers)
+    res = run_sweep(sw, workers=workers, engine=engine)
     per_call = res.us_per_call  # per-cell sim cost, worker-count independent
     grid = res.grid("workload", "scheme")
     rows = []
@@ -60,12 +61,12 @@ def run(n_accesses: int = 20_000, link_bw_frac: float = 0.25,
 
 
 def compare(n_accesses: int = 20_000, link_bw_frac: float = 0.25,
-            workers: int | None = None) -> dict:
+            workers: int | None = None, engine: str = "python") -> dict:
     """Serial vs parallel on the same grid: identical Metrics, wall speedup."""
     workers = default_workers() if workers is None else workers
     sw = build_sweep(n_accesses, link_bw_frac)
-    serial = run_sweep(sw, workers=1)
-    par = run_sweep(sw, workers=workers)
+    serial = run_sweep(sw, workers=1, engine=engine)
+    par = run_sweep(sw, workers=workers, engine=engine)
     identical = all(
         a.metrics.as_dict() == b.metrics.as_dict()
         for a, b in zip(serial.rows, par.rows)

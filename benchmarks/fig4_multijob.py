@@ -17,11 +17,12 @@ N_JOBS = 4
 
 
 def run(n_accesses: int = 15_000, workers: int | None = None,
+        engine: str = "python",
         bench_path: str = BENCH_PATH):
     workers = default_workers() if workers is None else workers
     sw = fig4_bottom_spec(workloads=("pr", "nw", "dr", "st"), n_jobs=N_JOBS,
                           n_accesses=n_accesses)
-    res = run_sweep(sw, workers=workers)
+    res = run_sweep(sw, workers=workers, engine=engine)
     per_call = res.us_per_call  # per-cell sim cost, worker-count independent
     g = res.grid("workload", "scheme")
     rows = []

@@ -30,11 +30,12 @@ WORKLOADS = ("pr", "nw", "st", "ml")
 
 
 def run(n_accesses: int = 15_000, workers: int | None = None,
+        engine: str = "python",
         bench_path: str = BENCH_PATH):
     """Fig. 4 top: workload x link bandwidth x MC count, page vs daemon."""
     workers = default_workers() if workers is None else workers
     sw = fig4_top_spec(workloads=WORKLOADS, n_accesses=n_accesses)
-    res = run_sweep(sw, workers=workers)
+    res = run_sweep(sw, workers=workers, engine=engine)
     per_call = res.us_per_call  # per-cell sim cost, worker-count independent
     g = res.grid("workload", "link_bw_frac", "n_mcs", "scheme")
     rows = []
@@ -57,12 +58,13 @@ def run(n_accesses: int = 15_000, workers: int | None = None,
 
 
 def _run_axis_sweep(sw: Sweep, axis: str, tag: str, derived_key: str,
-                    workers: int | None, bench_path: str):
+                    workers: int | None, bench_path: str,
+                    engine: str = "python"):
     """Shared body of the scenario-axis sections: run the sweep, report the
     daemon-vs-page geomean per value of ``axis`` (plus per-workload ratios),
     and merge into the ledger."""
     workers = default_workers() if workers is None else workers
-    res = run_sweep(sw, workers=workers)
+    res = run_sweep(sw, workers=workers, engine=engine)
     per_call = res.us_per_call  # per-cell sim cost, worker-count independent
     rows, derived = [], {}
     for v in sw.axes[axis]:
@@ -80,6 +82,7 @@ def _run_axis_sweep(sw: Sweep, axis: str, tag: str, derived_key: str,
 
 
 def run_jitter(n_accesses: int = 15_000, workers: int | None = None,
+               engine: str = "python",
                bench_path: str = BENCH_PATH):
     """Scenario axis (a): bandwidth jitter (fabric congestion).  Every link's
     available bandwidth dips each epoch (multiplier 1 - j*U[0,1)); DaeMon's
@@ -95,10 +98,11 @@ def run_jitter(n_accesses: int = 15_000, workers: int | None = None,
         n_accesses=n_accesses,
     )
     return _run_axis_sweep(sw, "bw_jitter", "jitter", "jitter",
-                           workers, bench_path)
+                           workers, bench_path, engine=engine)
 
 
 def run_nmcs(n_accesses: int = 15_000, workers: int | None = None,
+             engine: str = "python",
              bench_path: str = BENCH_PATH):
     """Scenario axis (b): multi-MC scaling with hashed page interleaving —
     pages (and the line fetches into them) spread across n_mcs independent
@@ -113,7 +117,8 @@ def run_nmcs(n_accesses: int = 15_000, workers: int | None = None,
         base=SimConfig(link_bw_frac=0.125, mc_interleave="hash"),
         n_accesses=n_accesses,
     )
-    return _run_axis_sweep(sw, "n_mcs", "nmcs", "n_mcs", workers, bench_path)
+    return _run_axis_sweep(sw, "n_mcs", "nmcs", "n_mcs", workers,
+                           bench_path, engine=engine)
 
 
 if __name__ == "__main__":

@@ -37,10 +37,11 @@ from benchmarks import BENCH_PATH
 
 
 def run(n_accesses: int = 15_000, workers: int | None = None,
+        engine: str = "python",
         bench_path: str = BENCH_PATH):
     workers = default_workers() if workers is None else workers
     sw = fig5_scalability_spec(n_accesses=n_accesses)
-    res = run_sweep(sw, workers=workers)
+    res = run_sweep(sw, workers=workers, engine=engine)
     per_call = res.us_per_call  # per-cell sim cost, worker-count independent
     rows, derived = [], {}
     for n_ccs in sw.axes["n_ccs"]:

@@ -42,10 +42,11 @@ from benchmarks import BENCH_PATH
 
 
 def run(n_accesses: int = 20_000, workers: int | None = None,
+        engine: str = "python",
         bench_path: str = BENCH_PATH):
     workers = default_workers() if workers is None else workers
     sw = fig6_ablation_spec(n_accesses=n_accesses)
-    res = run_sweep(sw, workers=workers)
+    res = run_sweep(sw, workers=workers, engine=engine)
     per_call = res.us_per_call  # per-cell sim cost, worker-count independent
     rows, derived = [], {}
     for row in fig6_geomeans(res):  # the same numbers runner.fig6_ablation returns
@@ -73,7 +74,8 @@ def _t975(df: int) -> float:
 
 
 def run_variance(n_accesses: int = 20_000, workers: int | None = None,
-                 seeds=(0, 1, 2, 3, 4), bench_path: str = BENCH_PATH):
+                 seeds=(0, 1, 2, 3, 4), engine: str = "python",
+                 bench_path: str = BENCH_PATH):
     """Variance study on the ablation grid (ROADMAP item, nightly-only):
     the fig6 grid re-run with a ``seed`` axis and ``derive_seeds=True`` so
     every seed draws decorrelated traces while schemes within a seed stay
@@ -93,7 +95,7 @@ def run_variance(n_accesses: int = 20_000, workers: int | None = None,
         axes={**dict(base.axes), "seed": tuple(seeds)},
         derive_seeds=True,
     )
-    res = run_sweep(sw, workers=workers)
+    res = run_sweep(sw, workers=workers, engine=engine)
     per_call = res.us_per_call
     rows, derived = [], {}
     g = res.grid("workload", "scheme", "seed")

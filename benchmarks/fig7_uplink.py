@@ -40,10 +40,11 @@ from benchmarks import BENCH_PATH
 
 
 def run(n_accesses: int = 15_000, workers: int | None = None,
+        engine: str = "python",
         bench_path: str = BENCH_PATH):
     workers = default_workers() if workers is None else workers
     sw = fig7_uplink_spec(n_accesses=n_accesses)
-    res = run_sweep(sw, workers=workers)
+    res = run_sweep(sw, workers=workers, engine=engine)
     per_call = res.us_per_call  # per-cell sim cost, worker-count independent
     rows, derived = [], {}
     for ub in sw.axes["uplink_bw"]:
@@ -62,6 +63,7 @@ def run(n_accesses: int = 15_000, workers: int | None = None,
 
 
 def run_wshare(n_accesses: int = 15_000, workers: int | None = None,
+               engine: str = "python",
                bench_path: str = BENCH_PATH):
     """ROADMAP uplink follow-on: ``writeback_share`` as a swept axis.  At a
     strongly-asymmetric (0.125x) uplink, sweep the bandwidth fraction
@@ -87,7 +89,7 @@ def run_wshare(n_accesses: int = 15_000, workers: int | None = None,
         base=base.with_(uplink_bw=0.125 * base.link_bw),
         n_accesses=n_accesses,
     )
-    res = run_sweep(sw, workers=workers)
+    res = run_sweep(sw, workers=workers, engine=engine)
     per_call = res.us_per_call
     rows, derived = [], {}
     for ws in sw.axes["writeback_share"]:

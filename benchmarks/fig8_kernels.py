@@ -36,10 +36,11 @@ from benchmarks import BENCH_PATH
 
 
 def run(n_accesses: int = 20_000, workers: int | None = None,
+        engine: str = "python",
         bench_path: str = BENCH_PATH):
     workers = default_workers() if workers is None else workers
     sw = fig8_kernels_spec(n_accesses=n_accesses)
-    res = run_sweep(sw, workers=workers)
+    res = run_sweep(sw, workers=workers, engine=engine)
     per_call = res.us_per_call  # per-cell sim cost, worker-count independent
     rows, derived = [], {}
     for w in sw.axes["workload"]:

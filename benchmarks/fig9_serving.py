@@ -41,7 +41,8 @@ TENANTS = ("llm", "graph")
 
 def run(n_requests: int = 96, prefill_accesses: int = 1024,
         decode_steps: int = 4, decode_accesses: int = 256,
-        workers: int | None = None, bench_path: str = BENCH_PATH):
+        workers: int | None = None, engine: str = "python",
+        bench_path: str = BENCH_PATH):
     workers = default_workers() if workers is None else workers
     rows = []
     for tenant in TENANTS:
@@ -49,7 +50,7 @@ def run(n_requests: int = 96, prefill_accesses: int = 1024,
             tenant=tenant, n_requests=n_requests,
             prefill_accesses=prefill_accesses, decode_steps=decode_steps,
             decode_accesses=decode_accesses)
-        res = run_sweep(sw, workers=workers)
+        res = run_sweep(sw, workers=workers, engine=engine)
         per_call = res.us_per_call
         t_rows, derived = fig9_tails(res, tenant)
         write_bench(bench_path, res, derived=derived)

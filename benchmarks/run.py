@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import os
 import sys
+import time
 
 # support both `python -m benchmarks.run` and `python benchmarks/run.py`
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
@@ -66,6 +67,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_kernels,
+        engine_bench,
         fig2_schemes,
         fig4_multijob,
         fig4_robustness,
@@ -84,6 +86,10 @@ def main() -> None:
                     help="comma-separated section names to run")
     ap.add_argument("--workers", type=int, default=None,
                     help="sweep worker processes (default: all cores)")
+    ap.add_argument("--engine", choices=("python", "batch"), default="python",
+                    help="sweep cell engine: per-cell oracle event loop or "
+                         "the lockstep batch core (bit-identical; uncovered "
+                         "cells fall back to the oracle automatically)")
     ap.add_argument("--list", action="store_true",
                     help="print registered policies, workloads, and sections")
     args = ap.parse_args()
@@ -108,18 +114,20 @@ def main() -> None:
                else dict(n_requests=96, prefill_accesses=1024,
                          decode_steps=4, decode_accesses=256))
     w = args.workers
+    eng = args.engine
     sections = [
-        ("fig2", lambda: fig2_schemes.run(n_accesses=n_fig2, workers=w)),
-        ("fig4_top", lambda: fig4_robustness.run(n_accesses=n_fig4, workers=w)),
-        ("fig4_bottom", lambda: fig4_multijob.run(n_accesses=n_fig4, workers=w)),
-        ("sweep_jitter", lambda: fig4_robustness.run_jitter(n_accesses=n_fig4, workers=w)),
-        ("sweep_nmcs", lambda: fig4_robustness.run_nmcs(n_accesses=n_fig4, workers=w)),
-        ("fig5", lambda: fig5_scalability.run(n_accesses=n_fig4, workers=w)),
-        ("fig6", lambda: fig6_ablation.run(n_accesses=n_fig6, workers=w)),
-        ("fig7", lambda: fig7_uplink.run(n_accesses=n_fig7, workers=w)),
-        ("fig7_wshare", lambda: fig7_uplink.run_wshare(n_accesses=n_fig7, workers=w)),
-        ("fig8", lambda: fig8_kernels.run(n_accesses=n_fig8, workers=w)),
-        ("fig9", lambda: fig9_serving.run(workers=w, **fig9_kw)),
+        ("fig2", lambda: fig2_schemes.run(n_accesses=n_fig2, workers=w, engine=eng)),
+        ("fig4_top", lambda: fig4_robustness.run(n_accesses=n_fig4, workers=w, engine=eng)),
+        ("fig4_bottom", lambda: fig4_multijob.run(n_accesses=n_fig4, workers=w, engine=eng)),
+        ("sweep_jitter", lambda: fig4_robustness.run_jitter(n_accesses=n_fig4, workers=w, engine=eng)),
+        ("sweep_nmcs", lambda: fig4_robustness.run_nmcs(n_accesses=n_fig4, workers=w, engine=eng)),
+        ("fig5", lambda: fig5_scalability.run(n_accesses=n_fig4, workers=w, engine=eng)),
+        ("fig6", lambda: fig6_ablation.run(n_accesses=n_fig6, workers=w, engine=eng)),
+        ("fig7", lambda: fig7_uplink.run(n_accesses=n_fig7, workers=w, engine=eng)),
+        ("fig7_wshare", lambda: fig7_uplink.run_wshare(n_accesses=n_fig7, workers=w, engine=eng)),
+        ("fig8", lambda: fig8_kernels.run(n_accesses=n_fig8, workers=w, engine=eng)),
+        ("fig9", lambda: fig9_serving.run(workers=w, engine=eng, **fig9_kw)),
+        ("engine_bench", lambda: engine_bench.run(n_accesses=n_fig2)),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]
@@ -127,7 +135,7 @@ def main() -> None:
     # seed-axis variance grid is ~6x a fig6 run — nightly.yml selects it;
     # a bare `run.py` keeps the canonical ledger sections)
     optin = [
-        ("fig6_var", lambda: fig6_ablation.run_variance(n_accesses=n_fig6, workers=w)),
+        ("fig6_var", lambda: fig6_ablation.run_variance(n_accesses=n_fig6, workers=w, engine=eng)),
     ]
     section_names = [s[0] for s in sections] + [s[0] for s in optin]
     if args.list:
@@ -144,13 +152,21 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    t_all = time.perf_counter()
     for name, fn in sections:
+        t0 = time.perf_counter()
         try:
             for tag, us, derived in fn():
                 print(f"{tag},{us:.1f},{derived}")
         except Exception as e:  # keep the harness going; report at the end
             failures += 1
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
+        # per-section wall-clock on stderr: the ledger carries the same
+        # numbers as non-gated wall_* keys (docs/SWEEPS.md)
+        print(f"[wall] {name}: {time.perf_counter() - t0:.2f}s",
+              file=sys.stderr)
+    print(f"[wall] total ({args.engine} engine): "
+          f"{time.perf_counter() - t_all:.2f}s", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -1,5 +1,12 @@
 from repro.core.sim.config import SCHEMES, Metrics, SimConfig
 from repro.core.sim.engine import LinkSchedule, Simulator, simulate
+from repro.core.sim.engine_batch import (
+    BatchCell,
+    BatchResult,
+    BatchState,
+    covers,
+    run_batch,
+)
 from repro.core.sim.policy import (
     MovementPolicy,
     available_policies,
@@ -50,6 +57,7 @@ from repro.core.sim.serving import (
     unregister_router,
 )
 from repro.core.sim.sweep import (
+    ENGINES,
     CellResult,
     Sweep,
     SweepResult,
@@ -58,6 +66,7 @@ from repro.core.sim.sweep import (
     run_sweep,
     scheme_geomean,
     scheme_ratio,
+    wall_stats,
     write_bench,
 )
 from repro.core.sim.trace import (
@@ -103,4 +112,6 @@ __all__ = [
     "register_workload", "save_trace", "unregister_workload",
     "CellResult", "Sweep", "SweepResult", "cell_seed", "default_workers",
     "run_sweep", "scheme_geomean", "scheme_ratio", "write_bench",
+    "BatchCell", "BatchResult", "BatchState", "covers", "run_batch",
+    "ENGINES", "wall_stats",
 ]

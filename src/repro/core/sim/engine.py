@@ -78,6 +78,79 @@ class Engine:
 
 
 # --------------------------------------------------------------------------
+# pure link/selection math, shared with the batch engine
+# --------------------------------------------------------------------------
+#
+# These are the arithmetic kernels of the simulator — no state, no events.
+# Both the oracle classes below and engine_batch.py call them, so the two
+# engines cannot drift apart on the float expressions that decide completion
+# times, fluid shares, placement, or selection-unit behaviour.  Any change
+# here changes BOTH engines identically (and the committed goldens).
+
+# inflight-page utilization below which pages drain fast (paper §3-II/III:
+# the selection unit and the compression trigger both key off this)
+PAGE_FAST = 0.3
+
+
+def fifo_finish(start: float, size: float, bw: float,
+                sched: Optional["LinkSchedule"]) -> float:
+    """Completion time of ``size`` bytes starting at ``start`` on a FIFO
+    link, integrating the piecewise-constant bandwidth schedule across
+    epoch boundaries (a plain ``size/bw`` when the schedule is inert)."""
+    if sched is None or not sched.bw_active:
+        return start + size / bw
+    t, rem = start, size
+    while True:
+        b = bw * sched.bw_mult(t)
+        nb = sched.next_boundary(t)
+        cap = b * (nb - t)
+        if rem <= cap:
+            return t + rem / b
+        rem -= cap
+        t = nb
+
+
+def fair_split(n_active: int, bw: float) -> float:
+    """Per-lane rate under fluid fair share: k backlogged lanes each drain
+    at bw/k (the fluid limit of round-robin packet arbitration)."""
+    return bw / n_active
+
+
+def class_share_split(n_lines: int, n_pages: int, bw: float,
+                      line_share: float) -> Tuple[float, float]:
+    """Per-lane (line_rate, page_rate) under DaeMon's fixed-rate queue
+    controller: the line class keeps ``line_share`` of ``bw`` whenever both
+    classes are backlogged, all of it when pages are idle (and vice versa);
+    within a class the backlogged lanes share equally."""
+    if n_lines and n_pages:
+        lb, pb = line_share * bw, (1.0 - line_share) * bw
+    elif n_lines:
+        lb, pb = bw, 0.0
+    else:
+        lb, pb = 0.0, bw
+    return (lb / n_lines if n_lines else 0.0,
+            pb / n_pages if n_pages else 0.0)
+
+
+def mc_place(page: int, n_mcs: int, mode: str) -> int:
+    """Page -> MC link placement (DESIGN.md §2.3)."""
+    if n_mcs <= 1:
+        return 0
+    if mode == "single":
+        return 0
+    if mode == "hash":  # Fibonacci hash: immune to power-of-two strides
+        return (((page * 0x9E3779B1) & 0xFFFFFFFF) >> 7) % n_mcs
+    return page % n_mcs
+
+
+def selection_races_line(lu: float, pu: float) -> bool:
+    """Adaptive selection unit (paper §3-II): race a line for a coalesced
+    miss only when the page queue is congested (the line is the
+    critical-path fast path) and the line buffer has room."""
+    return pu > PAGE_FAST and lu < 1.0
+
+
+# --------------------------------------------------------------------------
 # caches
 # --------------------------------------------------------------------------
 
@@ -183,18 +256,7 @@ class FifoLink:
     def _finish(self, start: float, size: float) -> float:
         """Completion time of ``size`` bytes starting at ``start``, integrating
         the piecewise-constant bandwidth schedule across epoch boundaries."""
-        sched = self.sched
-        if sched is None or not sched.bw_active:
-            return start + size / self.bw
-        t, rem = start, size
-        while True:
-            bw = self.bw * sched.bw_mult(t)
-            nb = sched.next_boundary(t)
-            cap = bw * (nb - t)
-            if rem <= cap:
-                return t + rem / bw
-            rem -= cap
-            t = nb
+        return fifo_finish(start, size, self.bw, self.sched)
 
     def send(self, t: float, size: float, cb: Callable[[float], None],
              cls: str = "line", flow: int = 0):
@@ -237,13 +299,13 @@ class DualQueueLink:
         return self.bw * s.bw_mult(t) if s is not None and s.bw_active else self.bw
 
     def _rates(self, t: float) -> Dict[str, float]:
-        active = [c for c in ("line", "page") if self.head_rem[c] > 0]
-        if not active:
+        la = self.head_rem["line"] > 0
+        pa = self.head_rem["page"] > 0
+        if not (la or pa):
             return {"line": 0.0, "page": 0.0}
-        bw = self._bw_at(t)
-        if len(active) == 2:
-            return {c: self.share[c] * bw for c in active}
-        return {active[0]: bw, ("page" if active[0] == "line" else "line"): 0.0}
+        lr, pr = class_share_split(1 if la else 0, 1 if pa else 0,
+                                   self._bw_at(t), self.share["line"])
+        return {"line": lr, "page": pr}
 
     def _advance(self, t: float):
         sched = self.sched
@@ -490,7 +552,7 @@ class SharedFifoLink(SharedLink):
         return flow
 
     def _split(self, active: List[Hashable], bw: float) -> Dict[Hashable, float]:
-        r = bw / len(active)
+        r = fair_split(len(active), bw)
         return {c: r for c in active}
 
 
@@ -514,17 +576,12 @@ class SharedDualQueueLink(SharedLink):
     def _split(self, active: List[Hashable], bw: float) -> Dict[Hashable, float]:
         lines = [c for c in active if c[1] == "line"]
         pages = [c for c in active if c[1] == "page"]
-        if lines and pages:
-            lb, pb = self.line_share * bw, (1.0 - self.line_share) * bw
-        elif lines:
-            lb, pb = bw, 0.0
-        else:
-            lb, pb = 0.0, bw
+        lr, pr = class_share_split(len(lines), len(pages), bw, self.line_share)
         rates: Dict[Hashable, float] = {}
         for c in lines:
-            rates[c] = lb / len(lines)
+            rates[c] = lr
         for c in pages:
-            rates[c] = pb / len(pages)
+            rates[c] = pr
         return rates
 
 
@@ -561,17 +618,12 @@ class SharedHeteroLink(SharedLink):
     def _split(self, active: List[Hashable], bw: float) -> Dict[Hashable, float]:
         lines = [c for c in active if c[1] == "line"]
         bulk = [c for c in active if c[1] != "line"]
-        if lines and bulk:
-            lb, bb = self.line_share * bw, (1.0 - self.line_share) * bw
-        elif lines:
-            lb, bb = bw, 0.0
-        else:
-            lb, bb = 0.0, bw
+        lr, br = class_share_split(len(lines), len(bulk), bw, self.line_share)
         rates: Dict[Hashable, float] = {}
         for c in lines:
-            rates[c] = lb / len(lines)
+            rates[c] = lr
         for c in bulk:
-            rates[c] = bb / len(bulk)
+            rates[c] = br
         return rates
 
 
@@ -809,15 +861,7 @@ class Simulator:
         distinct pages spread across independent links per the policy.
         Placement is per-CC-address-space: two CCs' page p land on the same
         MC — they contend for its downlink, not for the page itself."""
-        n = self.cfg.n_mcs
-        if n <= 1:
-            return 0
-        mode = self.cfg.mc_interleave
-        if mode == "single":
-            return 0
-        if mode == "hash":  # Fibonacci hash: immune to power-of-two strides
-            return (((page * 0x9E3779B1) & 0xFFFFFFFF) >> 7) % n
-        return page % n
+        return mc_place(page, self.cfg.n_mcs, self.cfg.mc_interleave)
 
     def net_lat(self, mc: int, t: float) -> float:
         """One-way network latency on MC link ``mc`` at time ``t``."""
@@ -1107,7 +1151,7 @@ class Simulator:
         pu = len(cc.pending_pages) / self.cfg.inflight_pages
         return lu, pu
 
-    PAGE_FAST = 0.3  # inflight-page utilization below which pages drain fast
+    PAGE_FAST = PAGE_FAST  # module constant, see the pure-math block above
 
     def _composed_miss(self, cc: CCState, core: Core, line: int, wr: bool,
                        t: float) -> Optional[float]:
@@ -1136,9 +1180,7 @@ class Simulator:
             if line in cc.pending_lines:
                 cc.pending_lines[line].append(req)
             elif adaptive:
-                # race a line only when the page queue is congested (the
-                # line is the critical-path fast path)
-                if pu > self.PAGE_FAST and lu < 1.0:
+                if selection_races_line(lu, pu):
                     cc.pending_lines[line] = [req]
                     self._fetch_line_daemon(cc, line, t, req)
             elif not pol.page_carries_requests:

@@ -33,11 +33,17 @@ from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.sim.config import Metrics, SimConfig
 from repro.core.sim.engine import simulate
+from repro.core.sim.engine_batch import BatchCell, covers, run_batch
 from repro.core.sim.policy import MovementPolicy, get_policy
 from repro.core.sim.serving import get_router, serve_one
 from repro.core.sim.trace import generate, get_workload
 
 BENCH_SCHEMA = "repro.sim.sweep/v1"
+
+# cell execution engines: "python" is the per-cell oracle event loop,
+# "batch" the lockstep struct-of-arrays core (engine_batch.py) with
+# automatic per-cell fallback to the oracle for uncovered configs
+ENGINES = ("python", "batch")
 
 # axes consumed by the cell runner itself; everything else must be a
 # SimConfig field and is applied with cfg.with_()
@@ -136,8 +142,12 @@ class Sweep:
     footprint: int = 16 << 20
     base_seed: int = 0
     derive_seeds: bool = False
+    engine: str = "python"  # see ENGINES; overridable per run_sweep call
 
     def __post_init__(self):
+        if self.engine not in ENGINES:
+            raise ValueError(
+                f"unknown engine {self.engine!r}; choose one of {ENGINES}")
         for k, v in self.axes.items():
             if k not in RESERVED_AXES and k not in SimConfig.__dataclass_fields__:
                 raise ValueError(f"unknown sweep axis {k!r}")
@@ -191,9 +201,9 @@ class CellResult:
                    metrics=Metrics.from_dict(d["metrics"]))
 
 
-def _run_cell(payload: Tuple[Sweep, Dict[str, Any]]) -> CellResult:
-    """Top-level (picklable) worker: execute one sweep cell."""
-    sweep, cell = payload
+def _resolve_cell(sweep: Sweep, cell: Dict[str, Any]) -> Tuple[SimConfig, int]:
+    """Cell axes -> (SimConfig, seed): the single definition both engines
+    share, so the batch path cannot drift from the oracle path."""
     cfg_kw = {k: v for k, v in cell.items() if k not in RESERVED_AXES}
     cfg = sweep.base.with_(**cfg_kw) if cfg_kw else sweep.base
     seed = int(cell.get("seed", sweep.base_seed))
@@ -203,6 +213,21 @@ def _run_cell(payload: Tuple[Sweep, Dict[str, Any]]) -> CellResult:
         # (scheme_ratio/scheme_geomean) divide against each other
         seed = cell_seed({k: v for k, v in cell.items() if k != "scheme"},
                          base_seed=seed)
+    return cfg, seed
+
+
+def _to_batch_cell(sweep: Sweep, cell: Dict[str, Any]) -> BatchCell:
+    cfg, seed = _resolve_cell(sweep, cell)
+    return BatchCell(cell.get("workload", "pr"), cell.get("scheme", "daemon"),
+                     cfg, seed=seed, n_accesses=sweep.n_accesses,
+                     footprint=sweep.footprint,
+                     n_jobs=int(cell.get("n_jobs", 1)))
+
+
+def _run_cell(payload: Tuple[Sweep, Dict[str, Any]]) -> CellResult:
+    """Top-level (picklable) worker: execute one sweep cell on the oracle."""
+    sweep, cell = payload
+    cfg, seed = _resolve_cell(sweep, cell)
     t0 = time.process_time()  # CPU time: robust to pool oversubscription
     m = run_one(
         cell.get("workload", "pr"),
@@ -217,6 +242,30 @@ def _run_cell(payload: Tuple[Sweep, Dict[str, Any]]) -> CellResult:
                       cpu_s=time.process_time() - t0)
 
 
+def _run_batch_group(
+    payload: Tuple[Sweep, List[Tuple[int, Dict[str, Any]]]],
+) -> List[Tuple[int, CellResult]]:
+    """Top-level (picklable) worker: run a group of covered cells through the
+    batch engine in one lockstep pass, returning (row_index, CellResult)
+    pairs.  Per-cell cpu_s is measured inside the batch driver."""
+    sweep, idx_cells = payload
+    bcells = [_to_batch_cell(sweep, cell) for _, cell in idx_cells]
+    br = run_batch(bcells)
+    return [
+        (i, CellResult(axes=cell, metrics=m, seed=bc.seed, cpu_s=cpu))
+        for (i, cell), bc, m, cpu in zip(idx_cells, bcells, br.metrics,
+                                         br.cpu_s)
+    ]
+
+
+def _trace_signature(bc: BatchCell) -> tuple:
+    """Trace-shape signature: cells with equal signatures replay the same
+    prepared traces, so they belong in the same worker's TracePool."""
+    cfg = bc.cfg
+    return (bc.workload, bc.seed, bc.footprint, bc.n_accesses, bc.n_jobs,
+            max(1, cfg.n_cores), max(1, cfg.n_ccs), cfg.gap_scale)
+
+
 # --------------------------------------------------------------------------
 # execution
 # --------------------------------------------------------------------------
@@ -229,6 +278,7 @@ class SweepResult:
     rows: List[CellResult]
     wall_s: float = 0.0
     workers: int = 1
+    engine: str = "python"  # which cell engine produced the rows
     # provenance: the Sweep spec that produced the rows (base SimConfig,
     # n_accesses, footprint, seed policy) so ledger entries are reproducible
     spec: Optional[Dict[str, Any]] = None
@@ -265,6 +315,7 @@ class SweepResult:
             "spec": self.spec,
             "wall_s": self.wall_s,
             "workers": self.workers,
+            "engine": self.engine,
             "n_cells": len(self.rows),
             "rows": [r.as_dict() for r in self.rows],
         }
@@ -277,6 +328,7 @@ class SweepResult:
             rows=[CellResult.from_dict(r) for r in d["rows"]],
             wall_s=float(d.get("wall_s", 0.0)),
             workers=int(d.get("workers", 1)),
+            engine=str(d.get("engine", "python")),
             spec=d.get("spec"),
         )
 
@@ -302,24 +354,84 @@ def default_workers() -> int:
         return os.cpu_count() or 1
 
 
-def run_sweep(sweep: Sweep, workers: Optional[int] = None) -> SweepResult:
+def _run_cells_batch(sweep: Sweep, cells: List[Dict[str, Any]],
+                     workers: int) -> List[CellResult]:
+    """Batch-engine execution plan: covered cells advance in lockstep
+    (grouped so cells sharing a trace-shape signature land in the same
+    worker's TracePool), uncovered cells fall back to the oracle cell
+    runner.  Row order matches ``cells`` and results are bit-identical to
+    the python engine regardless of ``workers``."""
+    covered: List[Tuple[int, Dict[str, Any]]] = []
+    fallback: List[Tuple[int, Dict[str, Any]]] = []
+    sigs: Dict[int, tuple] = {}
+    for i, cell in enumerate(cells):
+        bc = _to_batch_cell(sweep, cell)
+        if covers(bc.cfg, bc.scheme):
+            covered.append((i, cell))
+            sigs[i] = _trace_signature(bc)
+        else:
+            fallback.append((i, cell))
+    rows: List[Optional[CellResult]] = [None] * len(cells)
+    if workers == 1:
+        for i, res in _run_batch_group((sweep, covered)):
+            rows[i] = res
+        for i, cell in fallback:
+            rows[i] = _run_cell((sweep, cell))
+        return rows
+    # parallel: one batch group per worker, filled signature-by-signature
+    # (largest first, into the least-loaded bucket) so trace sharing stays
+    # intra-worker while the cell count stays balanced
+    groups: Dict[tuple, List[Tuple[int, Dict[str, Any]]]] = {}
+    for i, cell in covered:
+        groups.setdefault(sigs[i], []).append((i, cell))
+    n_buckets = min(workers, len(groups)) or 1
+    buckets: List[List[Tuple[int, Dict[str, Any]]]] = [[] for _ in
+                                                       range(n_buckets)]
+    sizes = [0] * n_buckets
+    for g in sorted(groups.values(), key=len, reverse=True):
+        j = sizes.index(min(sizes))
+        buckets[j].extend(g)
+        sizes[j] += len(g)
+    with ProcessPoolExecutor(max_workers=workers) as pool:
+        futs = [pool.submit(_run_batch_group, (sweep, b))
+                for b in buckets if b]
+        fb = pool.map(_run_cell, [(sweep, c) for _, c in fallback],
+                      chunksize=1)
+        for fut in futs:
+            for i, res in fut.result():
+                rows[i] = res
+        for (i, _), res in zip(fallback, fb):
+            rows[i] = res
+    return rows
+
+
+def run_sweep(sweep: Sweep, workers: Optional[int] = None,
+              engine: Optional[str] = None) -> SweepResult:
     """Execute every cell of ``sweep``; ``workers<=1`` runs serial in-process,
-    otherwise cells fan out over a process pool.  Row order always matches
-    ``sweep.cells()`` and per-cell results are independent of ``workers``."""
+    otherwise cells fan out over a process pool.  ``engine`` overrides
+    ``sweep.engine`` ("python" = per-cell oracle, "batch" = lockstep batch
+    core with oracle fallback for uncovered cells).  Row order always
+    matches ``sweep.cells()`` and per-cell results are independent of both
+    ``workers`` and ``engine``."""
     cells = sweep.cells()
-    payloads = [(sweep, c) for c in cells]
+    eng = sweep.engine if engine is None else engine
+    if eng not in ENGINES:
+        raise ValueError(f"unknown engine {eng!r}; choose one of {ENGINES}")
     t0 = time.perf_counter()
     if workers is None:
         workers = 1
     workers = max(1, min(workers, len(cells) or 1))
-    if workers == 1:
-        rows = [_run_cell(p) for p in payloads]
+    if eng == "batch":
+        rows = _run_cells_batch(sweep, cells, workers)
+    elif workers == 1:
+        rows = [_run_cell((sweep, c)) for c in cells]
     else:
         # chunksize=1: cell costs vary by >10x across schemes/bandwidths, so
         # dynamic single-cell dispatch beats static chunking; IPC cost per
         # cell (~ms) is noise next to a cell (~100ms+)
         with ProcessPoolExecutor(max_workers=workers) as pool:
-            rows = list(pool.map(_run_cell, payloads, chunksize=1))
+            rows = list(pool.map(_run_cell, [(sweep, c) for c in cells],
+                                 chunksize=1))
     spec = {
         "base": asdict(sweep.base),
         "n_accesses": sweep.n_accesses,
@@ -329,7 +441,7 @@ def run_sweep(sweep: Sweep, workers: Optional[int] = None) -> SweepResult:
     }
     return SweepResult(name=sweep.name, axes=dict(sweep.axes), rows=rows,
                        wall_s=time.perf_counter() - t0, workers=workers,
-                       spec=spec)
+                       engine=eng, spec=spec)
 
 
 # --------------------------------------------------------------------------
@@ -377,11 +489,27 @@ def scheme_geomean(rows: Iterable[CellResult], num: str = "page",
 # --------------------------------------------------------------------------
 
 
+def wall_stats(result: SweepResult) -> Dict[str, float]:
+    """Non-gated throughput observability keys (``wall_*`` prefix, skipped
+    by check_bench's gate): per-section wall-clock, cells/sec, and mean
+    per-cell CPU seconds.  Written into every ledger entry so nightly runs
+    can chart engine-throughput trends across commits."""
+    n = len(result.rows)
+    wall = result.wall_s
+    return {
+        "wall_s": round(wall, 4),
+        "wall_cells_per_s": round(n / wall, 4) if wall > 0 else 0.0,
+        "wall_cpu_s_per_cell": round(
+            sum(r.cpu_s for r in result.rows) / n, 6) if n else 0.0,
+    }
+
+
 def write_bench(path: str, result: SweepResult,
                 derived: Optional[Mapping[str, Any]] = None) -> dict:
     """Merge ``result`` into the BENCH_sim.json ledger at ``path`` (created if
     missing), keyed by sweep name so repeated runs overwrite their own entry.
-    ``derived`` attaches summary stats (e.g. daemon-vs-page geomeans).  The
+    ``derived`` attaches summary stats (e.g. daemon-vs-page geomeans); the
+    non-gated ``wall_*`` throughput keys are always attached.  The
     read-modify-write holds an advisory lock so concurrently-running
     benchmarks do not drop each other's entries."""
     lock = open(path + ".lock", "w")
@@ -402,8 +530,7 @@ def write_bench(path: str, result: SweepResult,
             except (json.JSONDecodeError, OSError):
                 pass  # corrupt/foreign ledger: rewrite from scratch
         entry = result.as_dict()
-        if derived:
-            entry["derived"] = dict(derived)
+        entry["derived"] = {**wall_stats(result), **(dict(derived or {}))}
         doc.setdefault("sweeps", {})[result.name] = entry
         tmp = path + ".tmp"
         with open(tmp, "w") as f:

@@ -1,0 +1,272 @@
+"""Batch-engine parity tests (DESIGN.md §2.10): the lockstep batch core
+must be cell-for-cell BIT-IDENTICAL to the Python oracle — same Metrics
+dict, same derived seeds, same row order — on the full quick fig2 grid,
+on fig5/fig6/jitter/nmcs subsets, and on randomized SimConfigs spanning
+scheme x workload x jitter x n_ccs (hypothesis where installed, the
+deterministic fallback sampler otherwise).  Also covers the dispatch
+predicate (serving cells fall back to the oracle), batch serial == batch
+parallel, the Sweep(engine=...) surface, and the non-gated wall_* ledger
+keys."""
+import json
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core.sim import (
+    ENGINES,
+    BatchCell,
+    SimConfig,
+    Sweep,
+    covers,
+    fig2_spec,
+    fig5_scalability_spec,
+    fig6_ablation_spec,
+    run_batch,
+    run_one,
+    run_sweep,
+    wall_stats,
+    write_bench,
+)
+
+# --------------------------------------------------------------------------
+# hypothesis-or-fallback shim (same pattern as test_serving.py): property
+# tests pass either way; without hypothesis a deterministic sampler seeded
+# per test name drives the same strategies through a fixed example count.
+# --------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # no pip install available: run the fallback sampler
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _St:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+    st = _St()
+
+    def settings(max_examples=6, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            n_ex = getattr(fn, "_max_examples", 6)
+
+            def wrapper():
+                rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+                for _ in range(n_ex):
+                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+
+N = 2_000  # the quick-CI fig2 cell size
+FP = 2 << 20
+
+
+def _dicts(res):
+    return [r.metrics.as_dict() for r in res.rows]
+
+
+def _assert_rows_identical(a, b):
+    assert [r.axes for r in a.rows] == [r.axes for r in b.rows]
+    assert [r.seed for r in a.rows] == [r.seed for r in b.rows]
+    for ra, rb in zip(a.rows, b.rows):
+        assert ra.metrics.as_dict() == rb.metrics.as_dict(), ra.axes
+
+
+# --------------------------------------------------------------------------
+# grid parity: batch == oracle, bit for bit
+# --------------------------------------------------------------------------
+
+
+def test_full_quick_fig2_grid_bit_identical():
+    """The acceptance grid: all 48 quick fig2 cells (8 workloads x 6
+    schemes), batch vs oracle, metrics dict equality — not almost-equal."""
+    sw = fig2_spec(SimConfig(link_bw_frac=0.25), n_accesses=N)
+    _assert_rows_identical(run_sweep(sw, engine="python"),
+                           run_sweep(sw, engine="batch"))
+
+
+def test_fig5_multicc_grid_bit_identical():
+    """Multi-CC scalability cells (shared links, workload mixes)."""
+    sw = fig5_scalability_spec(n_accesses=1_000)
+    _assert_rows_identical(run_sweep(sw, engine="python"),
+                           run_sweep(sw, engine="batch"))
+
+
+def test_fig6_ablation_grid_bit_identical():
+    """Ablation policies (adaptive granularity, no-compression, fixed-gran,
+    dual-queue variants) — the widest policy-feature coverage."""
+    sw = fig6_ablation_spec(n_accesses=1_000)
+    _assert_rows_identical(run_sweep(sw, engine="python"),
+                           run_sweep(sw, engine="batch"))
+
+
+def test_jitter_and_nmcs_grid_bit_identical():
+    """Bandwidth/latency jitter schedules and hashed multi-MC placement."""
+    sw = Sweep(
+        name="t_jitter",
+        axes={"workload": ("dr", "st"),
+              "bw_jitter": (0.0, 0.5),
+              "lat_jitter": (0.0, 0.3),
+              "n_mcs": (1, 2),
+              "scheme": ("page", "daemon")},
+        base=SimConfig(link_bw_frac=0.125, jitter_period=20_000,
+                       mc_interleave="hash"),
+        n_accesses=N, footprint=FP,
+    )
+    _assert_rows_identical(run_sweep(sw, engine="python"),
+                           run_sweep(sw, engine="batch"))
+
+
+def test_derive_seeds_parity():
+    """Derived per-cell seeds (variance grids) resolve identically in both
+    engines — the seed plumbing is shared, not duplicated."""
+    sw = Sweep(
+        name="t_seeds",
+        axes={"workload": ("pr",), "seed": (0, 1, 2),
+              "scheme": ("page", "daemon")},
+        n_accesses=N, footprint=FP, derive_seeds=True,
+    )
+    _assert_rows_identical(run_sweep(sw, engine="python"),
+                           run_sweep(sw, engine="batch"))
+
+
+def test_batch_parallel_equals_batch_serial():
+    """Worker fan-out only regroups cells; it never changes results."""
+    sw = fig2_spec(SimConfig(link_bw_frac=0.25),
+                   workloads=("pr", "dr", "st"), n_accesses=N)
+    serial = run_sweep(sw, workers=1, engine="batch")
+    par = run_sweep(sw, workers=3, engine="batch")
+    _assert_rows_identical(serial, par)
+
+
+# --------------------------------------------------------------------------
+# randomized parity (the property test)
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    workload=st.sampled_from(("pr", "bf", "dr", "st", "ml", "dr+st")),
+    scheme=st.sampled_from(("local", "cacheline", "page", "both", "daemon",
+                            "daemon_fifo", "both_dualq", "daemon_nocomp")),
+    n_ccs=st.integers(1, 3),
+    bw_jitter=st.floats(0.0, 0.5),
+    lat_jitter=st.floats(0.0, 0.5),
+    link_bw_frac=st.sampled_from((0.5, 0.25, 0.125)),
+    seed=st.integers(0, 1 << 16),
+)
+def test_random_configs_bit_identical(workload, scheme, n_ccs, bw_jitter,
+                                      lat_jitter, link_bw_frac, seed):
+    """Randomized SimConfigs spanning scheme x workload x jitter x n_ccs:
+    run_batch on one cell == run_one on the same cell, bit for bit."""
+    cfg = SimConfig(n_ccs=n_ccs, bw_jitter=bw_jitter, lat_jitter=lat_jitter,
+                    link_bw_frac=link_bw_frac, jitter_period=10_000,
+                    jitter_seed=seed % 97)
+    cell = BatchCell(workload, scheme, cfg, seed=seed, n_accesses=1_200,
+                     footprint=FP)
+    oracle = run_one(workload, scheme, cfg, seed=seed, n_accesses=1_200,
+                     footprint=FP)
+    got = run_batch([cell]).metrics[0]
+    assert oracle.as_dict() == got.as_dict()
+
+
+# --------------------------------------------------------------------------
+# dispatch: coverage predicate + oracle fallback
+# --------------------------------------------------------------------------
+
+
+def test_covers_predicate():
+    assert covers(SimConfig(), "daemon")
+    assert not covers(SimConfig(serving_router="round_robin"), "daemon")
+    assert not covers(SimConfig(), ("page", "daemon"))  # per-CC hetero list
+
+
+def test_serving_cells_fall_back_to_oracle():
+    """A sweep whose cells the batch core does not cover must still produce
+    oracle-identical rows under engine='batch' (automatic fallback)."""
+    sw = Sweep(
+        name="t_serving",
+        axes={"scheme": ("page", "daemon")},
+        base=SimConfig(n_ccs=2, serving_router="round_robin", n_requests=4,
+                       prefill_accesses=128, decode_steps=2,
+                       decode_accesses=64, prefill_workload="st",
+                       decode_workload="st"),
+    )
+    _assert_rows_identical(run_sweep(sw, engine="python"),
+                           run_sweep(sw, engine="batch"))
+    _assert_rows_identical(run_sweep(sw, engine="python"),
+                           run_sweep(sw, workers=2, engine="batch"))
+
+
+def test_run_batch_rejects_uncovered_cell():
+    cell = BatchCell("pr", "daemon",
+                     SimConfig(serving_router="round_robin"))
+    with pytest.raises(ValueError, match="does not cover"):
+        run_batch([cell])
+
+
+# --------------------------------------------------------------------------
+# Sweep/engine surface + ledger keys
+# --------------------------------------------------------------------------
+
+
+def test_engine_field_validated_and_recorded():
+    assert ENGINES == ("python", "batch")
+    with pytest.raises(ValueError, match="unknown engine"):
+        Sweep(name="t", axes={}, engine="fortran")
+    sw = Sweep(name="t", axes={"workload": ("pr",)},
+               n_accesses=400, footprint=FP, engine="batch")
+    res = run_sweep(sw)  # engine comes from the spec
+    assert res.engine == "batch"
+    assert run_sweep(sw, engine="python").engine == "python"
+    with pytest.raises(ValueError, match="unknown engine"):
+        run_sweep(sw, engine="fortran")
+    # round-trips through the persistence schema
+    assert type(res).from_dict(res.as_dict()).engine == "batch"
+
+
+def test_wall_keys_in_ledger(tmp_path):
+    """write_bench always attaches the non-gated wall_* throughput keys,
+    and they carry through the ledger JSON."""
+    sw = Sweep(name="t_wall", axes={"workload": ("pr",),
+                                    "scheme": ("page", "daemon")},
+               n_accesses=400, footprint=FP)
+    res = run_sweep(sw, engine="batch")
+    ws = wall_stats(res)
+    assert set(ws) == {"wall_s", "wall_cells_per_s", "wall_cpu_s_per_cell"}
+    assert ws["wall_s"] > 0 and ws["wall_cells_per_s"] > 0
+    path = tmp_path / "BENCH_sim.json"
+    write_bench(str(path), res, derived={"daemon_vs_page_geomean": 1.0})
+    entry = json.loads(path.read_text())["sweeps"]["t_wall"]
+    assert entry["engine"] == "batch"
+    for k in ws:
+        assert k in entry["derived"]
+    assert entry["derived"]["daemon_vs_page_geomean"] == 1.0
