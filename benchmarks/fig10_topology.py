@@ -1,0 +1,100 @@
+"""Fabric topologies (DESIGN.md §2.11): daemon vs the page scheme across
+routed fabrics between the compute and memory pools.
+
+With ``SimConfig.topology`` set, every CC<->MC transfer resolves to an
+explicit multi-hop path through a registered fabric (fabric.py) —
+store-and-forward at each switch hop, per-port fluid arbitration across all
+flows sharing a port.  Daemon's dual-queue line/page partitioning rides
+every hop end-to-end, while the baselines' transfers cross FIFO switch
+ports where 4 KiB pages head-of-line-block demand lines from *other* CCs
+too.
+
+Two declarative Sweeps merge into BENCH_sim.json (docs/SWEEPS.md), gated
+in CI by check_bench.py:
+
+  fig10_topology — topology (direct / single_switch / two_tier) x
+      workload x n_ccs x scheme.  'direct' is the legacy flat per-MC link
+      bundle expressed as a 1-hop fabric; its geomean matches fig5's
+      operating point.
+  fig10_oversub — the two_tier fabric's leaf/spine trunks tightened from
+      non-blocking (oversub=1) to 4:1.  The headline acceptance trend: the
+      daemon-vs-page geomean grows monotonically with oversubscription —
+      the fabric-level restatement of the paper's Fig. 4 bandwidth sweep.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core.sim import (
+    default_workers,
+    fig10_oversub_spec,
+    fig10_topology_spec,
+    run_sweep,
+    scheme_geomean,
+    scheme_ratio,
+    write_bench,
+)
+
+from benchmarks import BENCH_PATH
+
+
+def run(n_accesses: int = 15_000, workers: int | None = None,
+        engine: str = "python",
+        bench_path: str = BENCH_PATH):
+    workers = default_workers() if workers is None else workers
+    rows = []
+
+    # topology grid: fabric shape x workload x n_ccs, page vs daemon
+    sw = fig10_topology_spec(n_accesses=n_accesses)
+    res = run_sweep(sw, workers=workers, engine=engine)
+    per_call = res.us_per_call  # per-cell sim cost, worker-count independent
+    derived = {}
+    for topo in sw.axes["topology"]:
+        sub = res.filter(topology=topo)
+        g = scheme_geomean(sub)
+        derived[f"daemon_vs_page_geomean@topo={topo}"] = g
+        rows.append((f"fig10/topo_{topo}/geomean_daemon_vs_page", per_call,
+                     f"speedup={g:.3f}"))
+        for key, ratio in sorted(scheme_ratio(sub).items()):
+            k = dict(key)
+            rows.append((f"fig10/{k['workload']}/topo_{topo}/"
+                         f"n_ccs{k['n_ccs']}", per_call,
+                         f"speedup={ratio:.3f}"))
+    write_bench(bench_path, res, derived=derived)
+
+    # oversubscription grid: two_tier trunks tightened from 1:1 to 4:1
+    so = fig10_oversub_spec(n_accesses=n_accesses)
+    reso = run_sweep(so, workers=workers, engine=engine)
+    per_call_o = reso.us_per_call
+    derived_o = {}
+    for o in so.axes["oversub"]:
+        sub = reso.filter(oversub=o)
+        g = scheme_geomean(sub)
+        derived_o[f"daemon_vs_page_geomean@topo=two_tier:oversub={o:g}"] = g
+        rows.append((f"fig10/oversub{o:g}/geomean_daemon_vs_page", per_call_o,
+                     f"speedup={g:.3f}"))
+        for key, ratio in sorted(scheme_ratio(sub).items()):
+            k = dict(key)
+            rows.append((f"fig10/{k['workload']}/oversub{o:g}/"
+                         f"n_ccs{k['n_ccs']}", per_call_o,
+                         f"speedup={ratio:.3f}"))
+    write_bench(bench_path, reso, derived=derived_o)
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--n-accesses", type=int, default=15_000)
+    args = ap.parse_args()
+    for tag, us, derived in run(args.n_accesses, args.workers):
+        print(f"{tag},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

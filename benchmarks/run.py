@@ -21,10 +21,13 @@ def list_registries(section_names) -> None:
     from repro.capture import CAPTURED, capture_meta
     from repro.core.sim import (
         available_policies,
+        available_topologies,
         available_workloads,
+        build_topology,
         compressibility_of,
         get_policy,
         get_workload,
+        topology_description,
     )
 
     print("policies (name: granularity/partitioning/up-uplink/compression"
@@ -38,6 +41,8 @@ def list_registries(section_names) -> None:
             flags.append("race")
         if p.line_share is not None:
             flags.append(f"line_share={p.line_share}")
+        if p.fabric is not None:
+            flags.append(f"fab-{p.fabric}")
         comp = "/".join([p.granularity, p.partitioning,
                          f"up-{p.uplink_partitioning}", p.compression,
                          "throttle" if p.throttle else "nothrottle"]
@@ -58,6 +63,13 @@ def list_registries(section_names) -> None:
               f"{m['footprint'] >> 10} KiB footprint, "
               f"x{m['compressibility']:.2f} measured, "
               f"operands={','.join(m['operands'])}")
+    print("topologies (name: ports/hops at 2 CCs x 2 MCs, description — "
+          "DESIGN.md §2.11):")
+    for name in available_topologies():
+        spec = build_topology(name, n_ccs=2, n_mcs=2)
+        hops = len(spec.down_paths[(0, 0)])
+        print(f"  {name:18s} {len(spec.ports)} ports, {hops} hop"
+              f"{'s' if hops != 1 else ''}  {topology_description(name)}")
     print("sections:")
     print("  " + ",".join(section_names))
 
@@ -76,6 +88,7 @@ def main() -> None:
         fig7_uplink,
         fig8_kernels,
         fig9_serving,
+        fig10_topology,
         roofline,
     )
 
@@ -113,6 +126,9 @@ def main() -> None:
                     decode_accesses=128) if args.quick
                else dict(n_requests=96, prefill_accesses=1024,
                          decode_steps=4, decode_accesses=256))
+    # fig10 needs >= 1000 accesses/thread so pointer-chase demand misses
+    # and the streaming bulk actually overlap on the shared trunks
+    n_fig10 = 4_000 if args.quick else 20_000
     w = args.workers
     eng = args.engine
     sections = [
@@ -127,6 +143,7 @@ def main() -> None:
         ("fig7_wshare", lambda: fig7_uplink.run_wshare(n_accesses=n_fig7, workers=w, engine=eng)),
         ("fig8", lambda: fig8_kernels.run(n_accesses=n_fig8, workers=w, engine=eng)),
         ("fig9", lambda: fig9_serving.run(workers=w, engine=eng, **fig9_kw)),
+        ("fig10", lambda: fig10_topology.run(n_accesses=n_fig10, workers=w, engine=eng)),
         ("engine_bench", lambda: engine_bench.run(n_accesses=n_fig2)),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),

@@ -9,6 +9,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Optional
 
+from repro.core.sim.fabric import available_topologies
+
 # The paper's six schemes, in figure order.  Since the policy registry
 # (policy.py) these are just the six legacy *registered compositions*;
 # `available_policies()` lists every registered policy including ablations.
@@ -63,6 +65,19 @@ class SimConfig:
     # when both classes are backlogged; request packets keep the rest
     # (mirrors line_share on the downlink).
     writeback_share: float = 0.4
+
+    # routed network fabric (§2.11 of DESIGN.md).  ``None`` (default) is the
+    # legacy flat model: one private link per MC and direction, bit-identical
+    # to every committed golden.  A registered topology name (fabric.py:
+    # direct / single_switch / two_tier) routes every CC<->MC transfer over
+    # an explicit multi-hop path of directed ports with store-and-forward
+    # switching (``switch_lat`` cycles of processing per switch hop) and
+    # per-port fluid arbitration.  ``oversub`` provisions the two_tier spine
+    # trunks at aggregate_endpoint_bw/oversub (>= 1.0; inert for direct and
+    # single_switch, and accepted there so sweep axes stay composable).
+    topology: Optional[str] = None
+    oversub: float = 1.0
+    switch_lat: int = 500  # store-and-forward processing per switch hop
 
     # scenario axis: time-varying network (§5 of DESIGN.md).  Models fabric
     # congestion: each link resamples per ``jitter_period`` cycles an
@@ -136,6 +151,21 @@ class SimConfig:
         if not (0.0 < self.writeback_share < 1.0):
             raise ValueError(
                 f"writeback_share={self.writeback_share} must be in (0, 1)")
+        # routed fabric (§2.11) — topology names resolve against the
+        # registry at construction time, like policies and workloads
+        if self.topology is not None and \
+                self.topology not in available_topologies():
+            raise ValueError(
+                f"topology={self.topology!r} not registered; choose from "
+                f"{available_topologies()} (or None for the legacy flat "
+                f"per-MC links)")
+        if self.oversub < 1.0:
+            raise ValueError(
+                f"oversub={self.oversub} must be >= 1.0 "
+                f"(1.0 = non-blocking trunks)")
+        if self.switch_lat < 0:
+            raise ValueError(
+                f"switch_lat={self.switch_lat} must be >= 0")
         for name in ("bw_jitter", "lat_jitter"):
             if not (0.0 <= getattr(self, name) <= 1.0):
                 raise ValueError(

@@ -46,6 +46,7 @@ from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.sim.config import Metrics, SimConfig
+from repro.core.sim.fabric import Fabric, PortSpec, build_topology
 from repro.core.sim.policy import get_policy
 from repro.core.sim.trace import Trace, compressibility_of
 
@@ -628,6 +629,57 @@ class SharedHeteroLink(SharedLink):
 
 
 # --------------------------------------------------------------------------
+# link factories (shared by the flat model and the fabric ports)
+# --------------------------------------------------------------------------
+
+
+def _arb_maker(eng: Engine, kind: str, share: Optional[float], n_ccs: int,
+               flow_dual: Optional[Tuple[bool, ...]] = None):
+    """Link factory ``mk(bw, sched)`` for one arbitration kind.  Single-CC
+    systems keep the legacy FifoLink/DualQueueLink classes (bit-identical);
+    multi-CC systems share the link across per-CC flows."""
+    if kind == "hetero":
+        return lambda bw, s: SharedHeteroLink(eng, bw, share, flow_dual, s)
+    if kind == "dual":
+        if n_ccs == 1:
+            return lambda bw, s: DualQueueLink(eng, bw, share, s)
+        return lambda bw, s: SharedDualQueueLink(eng, bw, share, n_ccs, s)
+    if n_ccs == 1:
+        return lambda bw, s: FifoLink(eng, bw, s)
+    return lambda bw, s: SharedFifoLink(eng, bw, n_ccs, s)
+
+
+def _downlink_arb(pols, cfg: SimConfig):
+    """Downlink arbitration from the CC policies' ``partitioning``
+    components: homogeneous fifo/dual (dual flows must also agree on the
+    resolved line share), else the per-flow hetero arbitration with the
+    line class protected at the strictest (max) share among dual flows.
+    Returns ``(kind, share, flow_dual)`` for :func:`_arb_maker`."""
+    def share_of(p) -> float:
+        return cfg.line_share if p.line_share is None else p.line_share
+
+    parts = {p.partitioning for p in pols}
+    shares = {share_of(p) for p in pols}
+    if len(parts) == 1 and (parts == {"fifo"} or len(shares) == 1):
+        kind = pols[0].partitioning
+        return kind, (share_of(pols[0]) if kind == "dual" else None), None
+    flow_dual = tuple(p.partitioning == "dual" for p in pols)
+    share = max(share_of(p) for p in pols if p.partitioning == "dual")
+    return "hetero", share, flow_dual
+
+
+def _uplink_arb(pols, cfg: SimConfig):
+    """Uplink arbitration from the policies' resolved ``uplink`` components
+    ('line' class = request packets keeping ``1 - writeback_share``)."""
+    req_share = 1.0 - cfg.writeback_share
+    parts = {p.uplink_partitioning for p in pols}
+    if len(parts) > 1:
+        return "hetero", req_share, tuple(
+            p.uplink_partitioning == "dual" for p in pols)
+    return pols[0].uplink_partitioning, req_share, None
+
+
+# --------------------------------------------------------------------------
 # requests / CC state
 # --------------------------------------------------------------------------
 
@@ -793,63 +845,65 @@ class Simulator:
         # with the line class protected at the strictest (max) resolved
         # share among the dual flows.
         pols = self.policies if self.policies else [self.policy] * n_ccs
-
-        def _share_of(p) -> float:
-            return cfg.line_share if p.line_share is None else p.line_share
-
-        dl_parts = {p.partitioning for p in pols}
-        dl_shares = {_share_of(p) for p in pols}
-        if len(dl_parts) == 1 and (dl_parts == {"fifo"} or len(dl_shares) == 1):
-            if pols[0].partitioning == "dual":
-                share = _share_of(pols[0])
-                mk = (
-                    (lambda s: DualQueueLink(self.eng, cfg.link_bw, share, s))
-                    if n_ccs == 1
-                    else (lambda s: SharedDualQueueLink(
-                        self.eng, cfg.link_bw, share, n_ccs, s))
-                )
-            else:
-                mk = (
-                    (lambda s: FifoLink(self.eng, cfg.link_bw, s))
-                    if n_ccs == 1
-                    else (lambda s: SharedFifoLink(
-                        self.eng, cfg.link_bw, n_ccs, s))
-                )
-        else:
-            flow_dual = tuple(p.partitioning == "dual" for p in pols)
-            share = max(_share_of(p) for p in pols if p.partitioning == "dual")
-            mk = (lambda s: SharedHeteroLink(
-                self.eng, cfg.link_bw, share, flow_dual, s))
-        self.links = [mk(s) for s in self.scheds]
-
+        dkind, dshare, dflow = _downlink_arb(pols, cfg)
+        mk = _arb_maker(self.eng, dkind, dshare, n_ccs, dflow)
         # per-MC CC->MC uplinks (§2.7): request packets ('line' class) +
         # writeback bulk ('page' class), arbitrated per the policy's uplink
         # component; both directions see the same per-MC network weather.
-        # None keeps the legacy folded-into-net_lat model bit-for-bit.
-        if cfg.uplink_bw is None:
-            self.uplinks = None
+        # uplink_bw=None keeps the legacy folded-into-net_lat model
+        # bit-for-bit (no up links/ports exist at all).
+        mku = None
+        if cfg.uplink_bw is not None:
+            ukind, ushare, uflow = _uplink_arb(pols, cfg)
+            mku = _arb_maker(self.eng, ukind, ushare, n_ccs, uflow)
+
+        if cfg.topology is None:
+            # legacy flat model: one private link per MC and direction
+            self.fabric = None
+            self.links = [mk(cfg.link_bw, s) for s in self.scheds]
+            self.uplinks = (None if mku is None else
+                            [mku(cfg.uplink_bw, s) for s in self.scheds])
+            self._req_hop_lat = [0.0] * cfg.n_mcs
         else:
-            ubw = cfg.uplink_bw
-            req_share = 1.0 - cfg.writeback_share
-            up_parts = {p.uplink_partitioning for p in pols}
-            if len(up_parts) > 1:
-                up_dual = tuple(p.uplink_partitioning == "dual" for p in pols)
-                mku = (lambda s: SharedHeteroLink(
-                    self.eng, ubw, req_share, up_dual, s))
-            elif pols[0].uplink_partitioning == "dual":
-                mku = (
-                    (lambda s: DualQueueLink(self.eng, ubw, req_share, s))
-                    if n_ccs == 1
-                    else (lambda s: SharedDualQueueLink(
-                        self.eng, ubw, req_share, n_ccs, s))
-                )
-            else:
-                mku = (
-                    (lambda s: FifoLink(self.eng, ubw, s))
-                    if n_ccs == 1
-                    else (lambda s: SharedFifoLink(self.eng, ubw, n_ccs, s))
-                )
-            self.uplinks = [mku(s) for s in self.scheds]
+            # routed fabric (§2.11): transfers cross explicit multi-hop
+            # paths.  Endpoint NIC ports keep the policy's endpoint
+            # arbitration (so 'direct' is the flat model, bit for bit);
+            # switch-owned ports follow the policy 'fabric' component,
+            # inheriting the direction's endpoint arbitration when unset —
+            # daemon's dual-queue partitioning survives every hop while
+            # FIFO baselines stay FIFO end-to-end.
+            spec = build_topology(cfg.topology, n_ccs=n_ccs,
+                                  n_mcs=cfg.n_mcs, oversub=cfg.oversub)
+            fabs = {p.fabric for p in pols}
+            fab = fabs.pop() if len(fabs) == 1 else None
+            mk_sw = mk if fab is None else _arb_maker(
+                self.eng, fab,
+                dshare if dshare is not None else cfg.line_share, n_ccs)
+            mku_sw = None
+            if mku is not None:
+                mku_sw = mku if fab is None else _arb_maker(
+                    self.eng, fab, ushare, n_ccs)
+
+            def port_link(p: PortSpec):
+                bw = (cfg.link_bw if p.down else cfg.uplink_bw) * p.bw_frac
+                sched = self.scheds[p.mc] if p.mc is not None else None
+                f = ((mk_sw if p.switch else mk) if p.down
+                     else (mku_sw if p.switch else mku))
+                return f(bw, sched)
+
+            self.fabric = Fabric(self.eng, spec, cfg.switch_lat, port_link,
+                                 include_up=mku is not None)
+            self.links = [self.fabric.down_route(j)
+                          for j in range(cfg.n_mcs)]
+            self.uplinks = (None if mku is None else
+                            [self.fabric.up_route(j)
+                             for j in range(cfg.n_mcs)])
+            # folded request path (uplink_bw=None): the request packet
+            # still crosses the up path's switches — charge their
+            # store-and-forward processing as pure latency (0.0 on 1-hop
+            # 'direct' paths, preserving flat-model identity)
+            self._req_hop_lat = [float(cfg.switch_lat * self.fabric.up_hops(j))
+                                 for j in range(cfg.n_mcs)]
 
     # ---------------- address helpers ----------------
     def page_of(self, line: int) -> int:
@@ -1019,8 +1073,11 @@ class Simulator:
         CC->MC uplink's protected 'line' class, then flies."""
         cfg = self.cfg
         if self.uplinks is None:
-            self.eng.at(t + self.net_lat(mc, t) + cfg.remote_mem_lat + extra,
-                        then)
+            # _req_hop_lat charges switch store-and-forward on the folded
+            # path (§2.11); 0.0 without a topology — adding it is then an
+            # exact float identity, keeping the committed goldens bit-true
+            self.eng.at(t + self.net_lat(mc, t) + cfg.remote_mem_lat + extra
+                        + self._req_hop_lat[mc], then)
             return
         cc.m.uplink_bytes += cfg.header_bytes
 

@@ -37,9 +37,10 @@ Where the speed comes from (DESIGN.md §2.10):
   the hot loop.
 
 Coverage: everything :func:`repro.core.sim.sweep.run_one` can express
-*except* the request-level serving layer (``cfg.serving_router``) and
-per-CC heterogeneous policy lists.  :func:`covers` is the dispatch
-predicate; uncovered cells fall back to the oracle in ``run_sweep``.
+*except* the request-level serving layer (``cfg.serving_router``),
+routed fabric topologies (``cfg.topology``), and per-CC heterogeneous
+policy lists.  :func:`covers` is the dispatch predicate; uncovered cells
+fall back to the oracle in ``run_sweep``.
 """
 from __future__ import annotations
 
@@ -95,6 +96,8 @@ def covers(cfg: SimConfig, scheme: Any) -> bool:
         return False  # per-CC heterogeneous policies (SharedHeteroLink)
     if cfg.serving_router is not None:
         return False  # request-level serving layer (§2.9)
+    if cfg.topology is not None:
+        return False  # routed fabric topologies (§2.11): multi-hop paths
     return True
 
 

@@ -31,6 +31,7 @@ GRANULARITIES = ("none", "line", "page", "both", "adaptive")
 PARTITIONINGS = ("fifo", "dual")
 COMPRESSIONS = ("off", "link")
 UPLINKS = (None, "fifo", "dual")
+FABRICS = (None, "fifo", "dual")
 
 
 @dataclass(frozen=True)
@@ -55,6 +56,15 @@ class MovementPolicy:
         uplink whenever backlogged), or ``None`` (default) to follow the
         ``partitioning`` component — daemon protects its request packets,
         FIFO baselines do not.
+    fabric — how *switch-owned* fabric ports arbitrate when
+        ``SimConfig.topology`` routes transfers through switches
+        (DESIGN.md §2.11): ``fifo`` / ``dual`` force that arbitration on
+        every switch hop, or ``None`` (default) to follow the direction's
+        endpoint arbitration (``partitioning`` downlink, ``uplink``
+        uplink) — daemon keeps its protected line class end-to-end on
+        every hop, FIFO baselines stay FIFO on every hop.  Endpoint NIC
+        ports always follow the endpoint components, so the ``direct``
+        topology reproduces the flat model whatever this is set to.
     compression — ``off`` or ``link``: congestion-triggered page
         compression at the MC (per-workload ratios; paper §3-III).
         ``link`` still honors the global ``SimConfig.compress`` switch.
@@ -75,6 +85,7 @@ class MovementPolicy:
     granularity: str = "adaptive"
     partitioning: str = "dual"
     uplink: Optional[str] = None
+    fabric: Optional[str] = None
     compression: str = "link"
     throttle: bool = True
     free_transfers: bool = False
@@ -97,6 +108,10 @@ class MovementPolicy:
             raise ValueError(
                 f"policy {self.name!r}: uplink={self.uplink!r} "
                 f"not in {UPLINKS}")
+        if self.fabric not in FABRICS:
+            raise ValueError(
+                f"policy {self.name!r}: fabric={self.fabric!r} "
+                f"not in {FABRICS}")
         if self.compression not in COMPRESSIONS:
             raise ValueError(
                 f"policy {self.name!r}: compression={self.compression!r} "
@@ -134,6 +149,7 @@ class MovementPolicy:
             "granularity": self.granularity,
             "partitioning": self.partitioning,
             "uplink": self.uplink_partitioning,
+            "fabric": self.fabric,
             "compression": self.compression,
             "throttle": self.throttle,
             "free_transfers": self.free_transfers,
@@ -245,6 +261,12 @@ register_policy(MovementPolicy(
     compression="off", throttle=False,
     description="decoupled movement + partitioning alone: line+page for "
                 "every miss on the dual-queue link, first arrival wins"))
+register_policy(MovementPolicy(
+    name="daemon_fabfifo", granularity="adaptive", partitioning="dual",
+    compression="link", throttle=True, fabric="fifo",
+    description="daemon with FIFO switch ports: dual-queue protection at "
+                "the endpoint NICs only (fabric-partitioning ablation, "
+                "§2.11; identical to daemon on topology=None/direct)"))
 register_policy(MovementPolicy(
     name="page_dualq", granularity="page", partitioning="dual",
     compression="off", throttle=False,

@@ -613,6 +613,129 @@ def fig9_serving(
     return rows
 
 
+# the fig10 topology grid (DESIGN.md §2.11): routed fabrics between the
+# compute and memory pools.  'direct' is the legacy flat per-MC link bundle
+# expressed as a 1-hop fabric (bit-identical metrics); 'single_switch' folds
+# every flow through one crossbar; 'two_tier' adds leaf/spine trunks whose
+# capacity shrinks with the oversubscription ratio
+TOPOLOGIES = ("direct", "single_switch", "two_tier")
+# pointer-chase (latency-bound lines) vs streaming (page-friendly bulk):
+# the pair where fabric partitioning matters most and least
+TOPOLOGY_WORKLOADS = ("pr", "st")
+# trunk oversubscription ratios for the two_tier grid: 1.0 = non-blocking
+OVERSUBS = (1.0, 2.0, 4.0)
+
+
+def fig10_topology_spec(
+    topologies: Iterable[str] = TOPOLOGIES,
+    workloads: Iterable[str] = TOPOLOGY_WORKLOADS,
+    n_ccs_list: Iterable[int] = (1, 4),
+    *,
+    cfg: Optional[SimConfig] = None,
+    **kw,
+) -> Sweep:
+    """The canonical topology grid (DESIGN.md §2.11): fabric shape x
+    workload x CC count, page vs daemon, at the congested end of the
+    paper's network range.  Shared by the API and
+    benchmarks/fig10_topology.py so the 'fig10_topology' BENCH_sim.json
+    entry has one meaning."""
+    axes = {
+        "workload": tuple(workloads),
+        "topology": tuple(topologies),
+        "n_ccs": tuple(n_ccs_list),
+        "scheme": ("page", "daemon"),
+    }
+    return Sweep(name="fig10_topology", axes=axes,
+                 base=cfg or SimConfig(link_bw_frac=0.25), **_sweep_kw(kw))
+
+
+def fig10_oversub_spec(
+    oversubs: Iterable[float] = OVERSUBS,
+    workloads: Iterable[str] = TOPOLOGY_WORKLOADS,
+    n_ccs_list: Iterable[int] = (1, 4),
+    *,
+    cfg: Optional[SimConfig] = None,
+    **kw,
+) -> Sweep:
+    """The canonical oversubscription grid (DESIGN.md §2.11): the two_tier
+    fabric's leaf/spine trunks tightened from non-blocking (1.0) to 4:1,
+    page vs daemon.  Daemon's dual-queue partitioning rides every hop, so
+    its advantage must grow monotonically as the trunks congest — the
+    fabric-level restatement of the paper's Fig. 4 bandwidth sweep."""
+    base = (cfg or SimConfig(link_bw_frac=0.25)).with_(topology="two_tier")
+    axes = {
+        "workload": tuple(workloads),
+        "oversub": tuple(oversubs),
+        "n_ccs": tuple(n_ccs_list),
+        "scheme": ("page", "daemon"),
+    }
+    return Sweep(name="fig10_oversub", axes=axes, base=base, **_sweep_kw(kw))
+
+
+def fig10_topology(
+    topologies: Iterable[str] = TOPOLOGIES,
+    oversubs: Iterable[float] = OVERSUBS,
+    workloads: Iterable[str] = TOPOLOGY_WORKLOADS,
+    n_ccs_list: Iterable[int] = (1, 4),
+    *,
+    cfg: Optional[SimConfig] = None,
+    workers: Optional[int] = None,
+    **kw,
+) -> List[dict]:
+    """Daemon-vs-page speedup across fabric shapes and trunk
+    oversubscription: per-cell rows plus a per-topology geomean and a
+    per-oversub geomean (two_tier).  The headline: page's 4 KiB transfers
+    monopolise every shared trunk they cross, so the deeper and more
+    oversubscribed the fabric, the more daemon's end-to-end dual-queue
+    partitioning is worth."""
+    rows: List[dict] = []
+    sw = fig10_topology_spec(topologies, workloads, n_ccs_list, cfg=cfg,
+                             **dict(kw))
+    g = run_sweep(sw, workers=workers).grid(
+        "workload", "topology", "n_ccs", "scheme")
+    for topo in sw.axes["topology"]:
+        ratios = []
+        for w in sw.axes["workload"]:
+            for n_ccs in sw.axes["n_ccs"]:
+                mp = g[(w, topo, n_ccs, "page")].metrics
+                md = g[(w, topo, n_ccs, "daemon")].metrics
+                ratios.append(mp.cycles / md.cycles)
+                rows.append(
+                    {
+                        "workload": w,
+                        "topology": topo,
+                        "n_ccs": n_ccs,
+                        "speedup": mp.cycles / md.cycles,
+                        "net_bytes_ratio": mp.net_bytes / max(md.net_bytes, 1e-9),
+                    }
+                )
+        rows.append({"workload": "geomean", "topology": topo,
+                     "speedup": geomean(ratios)})
+    so = fig10_oversub_spec(oversubs, workloads, n_ccs_list, cfg=cfg,
+                            **dict(kw))
+    go = run_sweep(so, workers=workers).grid(
+        "workload", "oversub", "n_ccs", "scheme")
+    for o in so.axes["oversub"]:
+        ratios = []
+        for w in so.axes["workload"]:
+            for n_ccs in so.axes["n_ccs"]:
+                mp = go[(w, o, n_ccs, "page")].metrics
+                md = go[(w, o, n_ccs, "daemon")].metrics
+                ratios.append(mp.cycles / md.cycles)
+                rows.append(
+                    {
+                        "workload": w,
+                        "topology": "two_tier",
+                        "oversub": o,
+                        "n_ccs": n_ccs,
+                        "speedup": mp.cycles / md.cycles,
+                    }
+                )
+        rows.append({"workload": "geomean", "topology": "two_tier",
+                     "oversub": o, "speedup": geomean(ratios)})
+    return rows
+
+
 def paper_claims(
     bw_fracs: Iterable[float] = (0.25, 0.125),
     *,

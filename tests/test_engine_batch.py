@@ -8,9 +8,7 @@ predicate (serving cells fall back to the oracle), batch serial == batch
 parallel, the Sweep(engine=...) surface, and the non-gated wall_* ledger
 keys."""
 import json
-import zlib
 
-import numpy as np
 import pytest
 
 from repro.core.sim import (
@@ -29,61 +27,7 @@ from repro.core.sim import (
     write_bench,
 )
 
-# --------------------------------------------------------------------------
-# hypothesis-or-fallback shim (same pattern as test_serving.py): property
-# tests pass either way; without hypothesis a deterministic sampler seeded
-# per test name drives the same strategies through a fixed example count.
-# --------------------------------------------------------------------------
-try:
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
-
-    HAVE_HYPOTHESIS = True
-except ImportError:  # no pip install available: run the fallback sampler
-    HAVE_HYPOTHESIS = False
-
-    class _Strategy:
-        def __init__(self, draw):
-            self.draw = draw
-
-    class _St:
-        @staticmethod
-        def integers(lo, hi):
-            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
-
-        @staticmethod
-        def floats(lo, hi):
-            return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
-
-        @staticmethod
-        def sampled_from(seq):
-            seq = list(seq)
-            return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
-
-    st = _St()
-
-    def settings(max_examples=6, **_kw):
-        def deco(fn):
-            fn._max_examples = max_examples
-            return fn
-
-        return deco
-
-    def given(**strategies):
-        def deco(fn):
-            n_ex = getattr(fn, "_max_examples", 6)
-
-            def wrapper():
-                rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
-                for _ in range(n_ex):
-                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
-
-            wrapper.__name__ = fn.__name__
-            wrapper.__doc__ = fn.__doc__
-            return wrapper
-
-        return deco
-
+from conftest import given, settings, st  # hypothesis-or-fallback shim
 
 N = 2_000  # the quick-CI fig2 cell size
 FP = 2 << 20
@@ -207,6 +151,25 @@ def test_covers_predicate():
     assert covers(SimConfig(), "daemon")
     assert not covers(SimConfig(serving_router="round_robin"), "daemon")
     assert not covers(SimConfig(), ("page", "daemon"))  # per-CC hetero list
+    # routed fabric topologies (§2.11) are multi-hop: oracle only — even
+    # 'direct', whose 1-hop metrics happen to match the legacy path
+    assert not covers(SimConfig(topology="direct"), "daemon")
+    assert not covers(SimConfig(topology="two_tier", oversub=2.0), "daemon")
+
+
+def test_topology_cells_fall_back_to_oracle():
+    """A sweep with a topology axis must produce oracle-identical rows
+    under engine='batch': topology=None cells dispatch to the batch core,
+    fabric cells fall back automatically."""
+    sw = Sweep(
+        name="t_topology",
+        axes={"workload": ("pr",), "topology": (None, "single_switch"),
+              "scheme": ("page", "daemon")},
+        base=SimConfig(link_bw_frac=0.25),
+        n_accesses=N, footprint=FP,
+    )
+    _assert_rows_identical(run_sweep(sw, workers=0, engine="batch"),
+                           run_sweep(sw, workers=0, engine="python"))
 
 
 def test_serving_cells_fall_back_to_oracle():

@@ -1,0 +1,262 @@
+"""Fabric topology tests (DESIGN.md §2.11): ``topology=None`` legacy
+parity with the committed goldens, ``direct`` == legacy bit-parity across
+system shapes, byte conservation across multi-hop paths, per-port
+arbitration class selection (daemon's dual queues ride every hop; the
+``fabric`` policy component downgrades switch ports only), registry
+fail-fast behavior, and the fig10 acceptance trend — tighter
+oversubscription degrades page at least as much as daemon on
+pointer-chase."""
+import pytest
+
+from repro.core.sim import (
+    SimConfig,
+    Simulator,
+    available_topologies,
+    build_topology,
+    register_topology,
+    run_one,
+    unregister_topology,
+)
+from repro.core.sim.engine import DualQueueLink, FifoLink, SharedDualQueueLink
+from repro.core.sim.fabric import PortSpec, TopologySpec
+from repro.core.sim.trace import generate
+
+from test_multicc import GOLD, N
+
+
+def test_topology_none_bit_parity_with_goldens():
+    """The legacy model (topology=None, the default) reproduces the
+    committed goldens bit-for-bit for all six registered schemes — no
+    fabric object is built and the flat per-MC links stay in place."""
+    cfg = SimConfig(link_bw_frac=0.25)
+    for key, exp in GOLD.items():
+        w, s = key.split("/")
+        m = run_one(w, s, cfg, seed=1, n_accesses=N)
+        for name, v in exp.items():
+            assert getattr(m, name) == v, (key, name)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),
+    dict(n_ccs=2),
+    dict(n_mcs=2),
+    dict(uplink_bw=2.0),
+    dict(n_ccs=2, n_mcs=2, uplink_bw=2.0),
+    dict(bw_jitter=0.4, lat_jitter=0.3),
+])
+def test_direct_topology_is_bitwise_legacy(kw):
+    """topology='direct' expresses the flat per-MC links as 1-hop fabric
+    paths: the full Metrics dict is bit-identical to topology=None for
+    every system shape — multi-CC, multi-MC, explicit uplink, weather."""
+    base = SimConfig(link_bw_frac=0.25, **kw)
+    w = "pr+st" if base.n_ccs > 1 else "pr"
+    for s in ("page", "daemon", "both"):
+        a = run_one(w, s, base, seed=3, n_accesses=3_000)
+        b = run_one(w, s, base.with_(topology="direct"), seed=3,
+                    n_accesses=3_000)
+        assert a.as_dict() == b.as_dict(), (kw, s)
+
+
+def _sim(workload, scheme, cfg, *, seed=0, n=4_000):
+    """A Simulator instance (not just Metrics) so tests can inspect the
+    fabric's per-port byte counters."""
+    per = max(1, n // cfg.n_cores)
+    parts = workload.split("+")  # '+'-mixes assign round-robin, as run_one
+    if cfg.n_ccs == 1 and len(parts) == 1:
+        traces = [generate(workload, seed=seed + j, footprint=16 << 20,
+                           n=per) for j in range(cfg.n_cores)]
+    else:
+        traces = [
+            [generate(parts[c % len(parts)],
+                      seed=seed + c * cfg.n_cores + j,
+                      footprint=16 << 20, n=per)
+             for j in range(cfg.n_cores)]
+            for c in range(cfg.n_ccs)
+        ]
+    sim = Simulator(cfg, scheme, traces, workload=workload, seed=seed)
+    m = sim.run()
+    return sim, m
+
+
+def test_byte_conservation_single_switch():
+    """Every byte sent into the fabric is delivered out of it, and the
+    per-direction totals match the Metrics byte accounting; with a 2-hop
+    path each tier's port-byte sum equals the direction total (no bytes
+    appear or vanish at the switch)."""
+    cfg = SimConfig(link_bw_frac=0.25, uplink_bw=4.0,
+                    topology="single_switch")
+    sim, m = _sim("wh", "page", cfg)
+    fab = sim.fabric
+    assert m.writebacks > 0  # the uplink direction actually carries bulk
+    for d in ("down", "up"):
+        assert fab.sent[d] > 0
+        assert fab.sent[d] == pytest.approx(fab.delivered[d])
+    assert m.net_bytes == pytest.approx(fab.sent["down"])
+    assert m.uplink_bytes == pytest.approx(fab.sent["up"])
+    down_nic = sum(ln.bytes for pn, ln in fab.ports.items()
+                   if pn.startswith("d:mc"))
+    down_sw = sum(ln.bytes for pn, ln in fab.ports.items()
+                  if pn.startswith("d:sw>cc"))
+    assert down_nic == pytest.approx(fab.sent["down"])
+    assert down_sw == pytest.approx(fab.sent["down"])
+
+
+def test_byte_conservation_two_tier_multi_cc():
+    """On the 4-hop two_tier paths with multiple CCs and MCs, every tier —
+    MC NICs, leaf->spine trunk, spine->leaf trunk, CC NICs — carries the
+    same down-direction byte total."""
+    cfg = SimConfig(link_bw_frac=0.25, n_ccs=2, n_mcs=2,
+                    topology="two_tier", oversub=2.0)
+    sim, m = _sim("pr+st", "daemon", cfg)
+    fab = sim.fabric
+    total = fab.sent["down"]
+    assert total > 0 and total == pytest.approx(fab.delivered["down"])
+    assert m.net_bytes == pytest.approx(total)
+    tiers = (
+        [pn for pn in fab.ports if pn.startswith("d:mc")],
+        ["d:leafm>spine"],
+        ["d:spine>leafc"],
+        [pn for pn in fab.ports if pn.startswith("d:leafc>cc")],
+    )
+    for tier in tiers:
+        assert sum(fab.ports[pn].bytes for pn in tier) == \
+            pytest.approx(total), tier
+
+
+def test_switch_ports_follow_the_fabric_policy_component():
+    """Arbitration class per port: daemon (fabric=None) carries its
+    dual-queue partitioning onto every hop; the page baseline gets FIFO
+    ports throughout; daemon_fabfifo keeps dual queues at the endpoint
+    NICs but downgrades switch-owned ports to FIFO — and is therefore
+    strictly slower than daemon under switched pointer-chase contention
+    while staying identical to daemon on topology=None."""
+    cfg = SimConfig(link_bw_frac=0.25, topology="single_switch")
+    by_scheme = {}
+    for s in ("page", "daemon", "daemon_fabfifo"):
+        sim, m = _sim("pr", s, cfg)
+        by_scheme[s] = (sim, m)
+    ports = {s: sim.fabric.ports for s, (sim, _) in by_scheme.items()}
+    assert type(ports["page"]["d:mc0"]) is FifoLink
+    assert type(ports["page"]["d:sw>cc0"]) is FifoLink
+    assert type(ports["daemon"]["d:mc0"]) is DualQueueLink
+    assert type(ports["daemon"]["d:sw>cc0"]) is DualQueueLink
+    assert type(ports["daemon_fabfifo"]["d:mc0"]) is DualQueueLink
+    assert type(ports["daemon_fabfifo"]["d:sw>cc0"]) is FifoLink
+    assert by_scheme["daemon"][1].cycles < by_scheme["daemon_fabfifo"][1].cycles
+    # the ablation is a no-op without a switched fabric (identical up to
+    # the scheme label itself)
+    flat = SimConfig(link_bw_frac=0.25)
+    a = run_one("pr", "daemon", flat, seed=2, n_accesses=3_000).as_dict()
+    b = run_one("pr", "daemon_fabfifo", flat, seed=2,
+                n_accesses=3_000).as_dict()
+    a.pop("scheme"), b.pop("scheme")
+    assert a == b
+
+
+def test_multi_cc_switch_ports_share_per_flow():
+    """With several CCs behind one switch, daemon's switch ports arbitrate
+    per (flow, class) lane — the shared dual-queue class — so one CC's
+    page bulk cannot starve another CC's demand lines."""
+    cfg = SimConfig(link_bw_frac=0.25, n_ccs=2, topology="single_switch")
+    sim, _ = _sim("pr+st", "daemon", cfg)
+    assert type(sim.fabric.ports["d:mc0"]) is SharedDualQueueLink
+    assert type(sim.fabric.ports["d:sw>cc0"]) is SharedDualQueueLink
+
+
+def test_switch_latency_is_charged_per_hop():
+    """Raising switch_lat strictly slows a switched topology but leaves
+    'direct' (no switch hops) untouched."""
+    base = SimConfig(link_bw_frac=0.25, topology="single_switch")
+    fast = run_one("pr", "daemon", base.with_(switch_lat=0),
+                   seed=1, n_accesses=3_000)
+    slow = run_one("pr", "daemon", base.with_(switch_lat=2_000),
+                   seed=1, n_accesses=3_000)
+    assert fast.cycles < slow.cycles
+    d = SimConfig(link_bw_frac=0.25, topology="direct")
+    a = run_one("pr", "daemon", d.with_(switch_lat=0), seed=1,
+                n_accesses=3_000)
+    b = run_one("pr", "daemon", d.with_(switch_lat=2_000), seed=1,
+                n_accesses=3_000)
+    assert a.as_dict() == b.as_dict()
+
+
+def test_oversub_monotonicity_on_pointer_chase():
+    """The fig10 acceptance trend at one representative cell: as the
+    two_tier trunks tighten from non-blocking to 4:1, the page scheme
+    degrades at least as much as daemon — the daemon-vs-page ratio never
+    shrinks."""
+    prev = 0.0
+    for o in (1.0, 2.0, 4.0):
+        cfg = SimConfig(link_bw_frac=0.25, topology="two_tier", oversub=o)
+        p = run_one("pr", "page", cfg, n_accesses=4_000)
+        d = run_one("pr", "daemon", cfg, n_accesses=4_000)
+        ratio = p.cycles / d.cycles
+        assert ratio >= prev, (o, ratio, prev)
+        prev = ratio
+
+
+def test_validation_fails_fast():
+    with pytest.raises(ValueError, match="topology"):
+        SimConfig(topology="clos")
+    with pytest.raises(ValueError, match="oversub"):
+        SimConfig(oversub=0.5)
+    with pytest.raises(ValueError, match="switch_lat"):
+        SimConfig(switch_lat=-1)
+    with pytest.raises(KeyError, match="registered topologies"):
+        build_topology("clos", n_ccs=1, n_mcs=1)
+    with pytest.raises(ValueError, match="oversub"):
+        build_topology("two_tier", n_ccs=1, n_mcs=1, oversub=0.25)
+    with pytest.raises(ValueError, match="bad topology name"):
+        register_topology("a/b")
+    with pytest.raises(ValueError, match="already registered"):
+        register_topology("direct")(lambda **kw: None)
+
+
+def test_registry_contents_and_custom_topology():
+    """The three built-ins are registered; a custom registered topology is
+    immediately usable as SimConfig.topology and unregister removes it."""
+    assert set(available_topologies()) >= {"direct", "single_switch",
+                                           "two_tier"}
+
+    @register_topology("t_hairpin", description="test-only single trunk")
+    def _hairpin(*, n_ccs, n_mcs, oversub):
+        ports = [PortSpec("d:trunk", down=True, switch=True),
+                 PortSpec("u:trunk", down=False, switch=True)]
+        down, up = {}, {}
+        for j in range(n_mcs):
+            ports.append(PortSpec(f"d:mc{j}", down=True, mc=j))
+            ports.append(PortSpec(f"u:mc{j}", down=False, mc=j, switch=True))
+            for i in range(n_ccs):
+                down[(j, i)] = (f"d:mc{j}", "d:trunk")
+                up[(i, j)] = ("u:trunk", f"u:mc{j}")
+        return TopologySpec("t_hairpin", n_ccs, n_mcs, oversub,
+                            tuple(ports), down, up)
+
+    try:
+        m = run_one("pr", "daemon", SimConfig(topology="t_hairpin"),
+                    n_accesses=1_000)
+        assert m.cycles > 0
+    finally:
+        unregister_topology("t_hairpin")
+    assert "t_hairpin" not in available_topologies()
+    with pytest.raises(ValueError, match="topology"):
+        SimConfig(topology="t_hairpin")
+
+
+def test_spec_validation_rejects_malformed_paths():
+    """TopologySpec.validate fails fast on incomplete path tables, paths
+    through undeclared ports, and direction mismatches."""
+    p_down = PortSpec("d:x", down=True)
+    p_up = PortSpec("u:x", down=False)
+    with pytest.raises(ValueError, match="cover exactly"):
+        TopologySpec("t", 1, 1, 1.0, (p_down, p_up), {},
+                     {(0, 0): ("u:x",)}).validate()
+    with pytest.raises(ValueError, match="undeclared port"):
+        TopologySpec("t", 1, 1, 1.0, (p_down, p_up),
+                     {(0, 0): ("d:ghost",)}, {(0, 0): ("u:x",)}).validate()
+    with pytest.raises(ValueError, match="against its direction"):
+        TopologySpec("t", 1, 1, 1.0, (p_down, p_up),
+                     {(0, 0): ("u:x",)}, {(0, 0): ("u:x",)}).validate()
+    with pytest.raises(ValueError, match="empty path"):
+        TopologySpec("t", 1, 1, 1.0, (p_down, p_up),
+                     {(0, 0): ()}, {(0, 0): ("u:x",)}).validate()

@@ -5,8 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis-or-fallback shim
 
 from repro.kernels.block_quant import ops as bq_ops
 from repro.kernels.block_quant import ref as bq_ref

@@ -1,11 +1,10 @@
-"""Cross-cutting property tests (hypothesis) on system invariants."""
+"""Cross-cutting property tests on system invariants (hypothesis where
+installed, the deterministic conftest fallback sampler otherwise)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis-or-fallback shim
 
 from repro.core.sim.engine import LRU, DualQueueLink, Engine
 from repro.optim import schedule

@@ -5,7 +5,6 @@ replay-slice edge semantics, router/pool wiring, and the legacy-parity
 lock — ``serving_router=None`` keeps all six schemes bit-identical to the
 committed GOLD/GOLD_MCC goldens."""
 import math
-import zlib
 
 import numpy as np
 import pytest
@@ -26,63 +25,8 @@ from repro.core.sim.engine import Engine, SharedHeteroLink
 from repro.core.sim.serving import ServingScheduler
 from repro.core.sim.trace import generate, replay_slice
 
+from conftest import given, settings, st  # hypothesis-or-fallback shim
 from test_multicc import GOLD, GOLD_MCC, N
-
-# --------------------------------------------------------------------------
-# hypothesis-or-fallback shim: the property tests below PASS either way.
-# With hypothesis installed they get real shrinking/coverage; without it a
-# deterministic sampler (seeded per test name) drives the same strategies
-# through a fixed number of examples.
-# --------------------------------------------------------------------------
-try:
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
-
-    HAVE_HYPOTHESIS = True
-except ImportError:  # no pip install available: run the fallback sampler
-    HAVE_HYPOTHESIS = False
-
-    class _Strategy:
-        def __init__(self, draw):
-            self.draw = draw
-
-    class _St:
-        @staticmethod
-        def integers(lo, hi):
-            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
-
-        @staticmethod
-        def floats(lo, hi):
-            return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
-
-        @staticmethod
-        def sampled_from(seq):
-            seq = list(seq)
-            return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
-
-    st = _St()
-
-    def settings(max_examples=6, **_kw):
-        def deco(fn):
-            fn._max_examples = max_examples
-            return fn
-
-        return deco
-
-    def given(**strategies):
-        def deco(fn):
-            n_ex = getattr(fn, "_max_examples", 6)
-
-            def wrapper():
-                rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
-                for _ in range(n_ex):
-                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
-
-            wrapper.__name__ = fn.__name__
-            wrapper.__doc__ = fn.__doc__
-            return wrapper
-
-        return deco
 
 
 # small/fast serving cell: synthetic streaming phases, 2 CCs
