@@ -1,0 +1,97 @@
+"""Movement-controller grid (fig11, DESIGN.md §2.12): the registered
+controllers (fixed, adaptive, tuned) head-to-head inside the daemon scheme
+on the three grids where the selection unit's decisions bind.
+
+Three declarative Sweeps share the fig6/fig7/fig8 grid definitions with a
+``controller`` axis added: the congested synthetic ablation suite
+(fig11_ablation), the asymmetric-uplink write-heavy grid (fig11_uplink),
+and the captured Pallas-kernel streams (fig11_kernels).  The derived
+daemon-vs-page geomeans per controller merge into BENCH_sim.json under
+``daemon_vs_page_geomean@ctrl=<c>`` / ``...@ctrl=<c>:grid=uplink`` /
+``...@ctrl=<c>:kernel=<w>`` and are gated in CI by check_bench.py.
+
+The headline: 'fixed' reproduces the legacy inline thresholds bit-for-bit
+(its keys must match the controller-free fig6/7/8 geomeans), 'adaptive'
+observes coalesce density and backs off line racing in page-dense phases —
+buying back the captured kernel traces where fixed-threshold racing loses —
+while staying within tolerance on the synthetics, and 'tuned' replays the
+per-workload thresholds fitted offline by benchmarks/fit_controller.py.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core.sim import (
+    default_workers,
+    fig11_ablation_spec,
+    fig11_geomeans,
+    fig11_kernels_spec,
+    fig11_uplink_spec,
+    run_sweep,
+    write_bench,
+)
+
+from benchmarks import BENCH_PATH
+
+
+def run(n_accesses: int = 20_000, workers: int | None = None,
+        engine: str = "python",
+        bench_path: str = BENCH_PATH,
+        n_kernel_accesses: int | None = None):
+    workers = default_workers() if workers is None else workers
+    if n_kernel_accesses is None:
+        # kernel replays need longer windows than the synthetics (several
+        # tile bursts; run.py uses 2x fig6's size for fig8 likewise)
+        n_kernel_accesses = 2 * n_accesses
+    ab_sw = fig11_ablation_spec(n_accesses=n_accesses)
+    up_sw = fig11_uplink_spec(n_accesses=n_accesses)
+    kn_sw = fig11_kernels_spec(n_accesses=n_kernel_accesses)
+    ab = run_sweep(ab_sw, workers=workers, engine=engine)
+    up = run_sweep(up_sw, workers=workers, engine=engine)
+    kn = run_sweep(kn_sw, workers=workers, engine=engine)
+    derived = fig11_geomeans(ab, up, kn)
+    # each ledger entry carries the derived keys its own grid produced
+    write_bench(bench_path, ab, derived={
+        k: v for k, v in derived.items() if ":" not in k})
+    write_bench(bench_path, up, derived={
+        k: v for k, v in derived.items() if ":grid=uplink" in k})
+    write_bench(bench_path, kn, derived={
+        k: v for k, v in derived.items() if ":kernel=" in k})
+    rows = []
+    for res, tag in ((ab, "ablation"), (up, "uplink"), (kn, "kernels")):
+        per_call = res.us_per_call
+        for c in res.axes["controller"]:
+            if tag == "ablation":
+                keys = [f"daemon_vs_page_geomean@ctrl={c}"]
+            elif tag == "uplink":
+                keys = [f"daemon_vs_page_geomean@ctrl={c}:grid=uplink"]
+            else:
+                keys = [k for k in derived
+                        if k.startswith(f"daemon_vs_page_geomean@ctrl={c}"
+                                        ":kernel=")]
+            for k in keys:
+                suffix = k.split("@ctrl=", 1)[1]
+                rows.append((f"fig11/{tag}/{suffix}", per_call,
+                             f"speedup={derived[k]:.3f}"))
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--n-accesses", type=int, default=20_000)
+    ap.add_argument("--engine", choices=("python", "batch"),
+                    default="python")
+    args = ap.parse_args()
+    for tag, us, derived in run(args.n_accesses, args.workers,
+                                engine=args.engine):
+        print(f"{tag},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Offline threshold fit for the 'tuned' movement controller (DESIGN.md
+§2.12).
+
+Sweeps candidate ``(page_fast, throttle_hi)`` pairs per workload on the
+batch engine — daemon cycles at the congested end of the paper's network
+range (link_bw_frac=0.125) — and prints the per-workload argmin as the
+``TUNED_THRESHOLDS`` literal for src/repro/core/sim/controller.py.  The
+candidate grid includes the fixed constants, so a fitted entry is never
+worse than ``fixed`` at the fit size by construction.
+
+The fit is intentionally in-process (``run_batch`` directly, no worker
+pool): candidates are applied by patching ``TUNED_THRESHOLDS`` before the
+batch frames instantiate their controllers, which only works when frame
+construction shares the patching interpreter.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/fit_controller.py [--n-accesses N]
+
+then paste the printed dict over ``TUNED_THRESHOLDS`` and re-run
+``benchmarks/run.py --quick --engine batch --only fig11`` to refresh the
+gated ledger keys.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core.sim import SimConfig
+from repro.core.sim import controller as ctrl_mod
+from repro.core.sim.engine_batch import BatchCell, TracePool, run_batch
+from repro.core.sim.runner import (
+    ABLATION_WORKLOADS,
+    KERNEL_WORKLOADS,
+    UPLINK_WORKLOADS,
+)
+
+# the candidate grid: page_fast (race/compress trigger) x throttle_hi
+# (page-issue backpressure), fixed constants (0.3, 0.75) included
+PAGE_FAST_GRID = (0.1, 0.2, 0.3, 0.4, 0.5)
+THROTTLE_HI_GRID = (0.5, 0.65, 0.75, 0.9)
+FIT_BW_FRAC = 0.125
+
+
+def fit(n_accesses: int = 8_000, n_kernel_accesses: int | None = None,
+        verbose: bool = True) -> dict:
+    if n_kernel_accesses is None:
+        n_kernel_accesses = 2 * n_accesses
+    cfg = SimConfig(link_bw_frac=FIT_BW_FRAC, controller="tuned")
+    workloads = tuple(dict.fromkeys(
+        tuple(ABLATION_WORKLOADS) + tuple(UPLINK_WORKLOADS)
+        + tuple(KERNEL_WORKLOADS)))
+    n_of = {w: (n_kernel_accesses if w in KERNEL_WORKLOADS else n_accesses)
+            for w in workloads}
+    tp = TracePool()  # share trace derivation across all candidates
+    best: dict = {}
+    saved = dict(ctrl_mod.TUNED_THRESHOLDS)
+    try:
+        for pf in PAGE_FAST_GRID:
+            for th in THROTTLE_HI_GRID:
+                ctrl_mod.TUNED_THRESHOLDS.clear()
+                ctrl_mod.TUNED_THRESHOLDS.update(
+                    {w: (pf, th) for w in workloads})
+                cells = [BatchCell(w, "daemon", cfg, seed=0,
+                                   n_accesses=n_of[w]) for w in workloads]
+                res = run_batch(cells, trace_pool=tp)
+                for w, m in zip(workloads, res.metrics):
+                    cur = best.get(w)
+                    if cur is None or m.cycles < cur[0]:
+                        best[w] = (m.cycles, pf, th)
+                if verbose:
+                    print(f"# candidate ({pf:.2f}, {th:.2f}) done",
+                          file=sys.stderr)
+    finally:
+        ctrl_mod.TUNED_THRESHOLDS.clear()
+        ctrl_mod.TUNED_THRESHOLDS.update(saved)
+    return {w: (pf, th) for w, (_, pf, th) in best.items()}
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-accesses", type=int, default=8_000)
+    args = ap.parse_args()
+    fitted = fit(args.n_accesses)
+    print("TUNED_THRESHOLDS: Dict[str, tuple] = {")
+    for w, (pf, th) in fitted.items():
+        print(f'    "{w}": ({pf:.2f}, {th:.2f}),')
+    print("}")
+
+
+if __name__ == "__main__":
+    main()

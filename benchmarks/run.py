@@ -20,15 +20,18 @@ def list_registries(section_names) -> None:
     (metadata), and benchmark sections."""
     from repro.capture import CAPTURED, capture_meta
     from repro.core.sim import (
+        available_controllers,
         available_policies,
         available_topologies,
         available_workloads,
         build_topology,
         compressibility_of,
+        get_controller,
         get_policy,
         get_workload,
         topology_description,
     )
+    from repro.core.sim.config import SimConfig
 
     print("policies (name: granularity/partitioning/up-uplink/compression"
           "/throttle[/flags]):")
@@ -63,6 +66,12 @@ def list_registries(section_names) -> None:
               f"{m['footprint'] >> 10} KiB footprint, "
               f"x{m['compressibility']:.2f} measured, "
               f"operands={','.join(m['operands'])}")
+    print("controllers (name: thresholds, description — DESIGN.md §2.12):")
+    _cfg = SimConfig()
+    for name in available_controllers():
+        c = get_controller(name)(_cfg)
+        th = ",".join(f"{k}={v}" for k, v in sorted(c.thresholds().items()))
+        print(f"  {name:18s} {th:44s} {c.description}")
     print("topologies (name: ports/hops at 2 CCs x 2 MCs, description — "
           "DESIGN.md §2.11):")
     for name in available_topologies():
@@ -89,6 +98,7 @@ def main() -> None:
         fig8_kernels,
         fig9_serving,
         fig10_topology,
+        fig11_controllers,
         roofline,
     )
 
@@ -129,6 +139,9 @@ def main() -> None:
     # fig10 needs >= 1000 accesses/thread so pointer-chase demand misses
     # and the streaming bulk actually overlap on the shared trunks
     n_fig10 = 4_000 if args.quick else 20_000
+    # fig11 reuses the fig6/fig7 grid sizing for its synthetic halves and
+    # 2x that for the captured-kernel half (fig8's sizing rationale)
+    n_fig11 = 4_000 if args.quick else 20_000
     w = args.workers
     eng = args.engine
     sections = [
@@ -144,6 +157,7 @@ def main() -> None:
         ("fig8", lambda: fig8_kernels.run(n_accesses=n_fig8, workers=w, engine=eng)),
         ("fig9", lambda: fig9_serving.run(workers=w, engine=eng, **fig9_kw)),
         ("fig10", lambda: fig10_topology.run(n_accesses=n_fig10, workers=w, engine=eng)),
+        ("fig11", lambda: fig11_controllers.run(n_accesses=n_fig11, workers=w, engine=eng)),
         ("engine_bench", lambda: engine_bench.run(n_accesses=n_fig2)),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),

@@ -9,6 +9,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Optional
 
+from repro.core.sim.controller import available_controllers
 from repro.core.sim.fabric import available_topologies
 
 # The paper's six schemes, in figure order.  Since the policy registry
@@ -95,6 +96,12 @@ class SimConfig:
     inflight_lines: int = 128  # inflight sub-block buffer capacity
     inflight_pages: int = 16  # inflight page buffer capacity
     page_throttle_hi: float = 0.75  # stop issuing pages above this utilization
+    # movement controller (§2.12 of DESIGN.md): the registered
+    # MovementController driving the selection/throttle/compression
+    # decisions on every CC.  ``None`` resolves to the legacy ``fixed``
+    # constants — bit-identical to every committed golden.  A policy's
+    # explicit ``controller`` component overrides this per CC.
+    controller: Optional[str] = None
     compress: bool = True
     comp_lat: int = 750  # page compression latency at the MC (~250 ns)
     decomp_lat: int = 750  # page decompression latency at the CC
@@ -122,6 +129,11 @@ class SimConfig:
     # disaggregated routers; None = the cell's scheme on every CC
     serving_prefill_policy: Optional[str] = None
     serving_decode_policy: Optional[str] = None
+    # per-pool MovementController overrides (registered controller names)
+    # for disaggregated routers, mirroring the per-pool policy overrides;
+    # None = the cell's controller resolution on every CC
+    serving_prefill_controller: Optional[str] = None
+    serving_decode_controller: Optional[str] = None
     # stop firing events past this cycle horizon (None = drain all requests)
     serving_horizon: Optional[float] = None
 
@@ -166,6 +178,16 @@ class SimConfig:
         if self.switch_lat < 0:
             raise ValueError(
                 f"switch_lat={self.switch_lat} must be >= 0")
+        # movement controllers (§2.12) — names resolve against the registry
+        # at construction time, like policies/workloads/topologies
+        for name in ("controller", "serving_prefill_controller",
+                     "serving_decode_controller"):
+            v = getattr(self, name)
+            if v is not None and v not in available_controllers():
+                raise ValueError(
+                    f"{name}={v!r} not registered; choose from "
+                    f"{available_controllers()} (or None for the legacy "
+                    f"fixed constants)")
         for name in ("bw_jitter", "lat_jitter"):
             if not (0.0 <= getattr(self, name) <= 1.0):
                 raise ValueError(

@@ -46,6 +46,15 @@ from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.sim.config import Metrics, SimConfig
+# PAGE_FAST / selection_races_line moved to controller.py (§2.12); the
+# re-export keeps engine_batch.py and existing imports working
+from repro.core.sim.controller import (  # noqa: F401
+    PAGE_FAST,
+    Observation,
+    make_controller,
+    resolve_controller,
+    selection_races_line,
+)
 from repro.core.sim.fabric import Fabric, PortSpec, build_topology
 from repro.core.sim.policy import get_policy
 from repro.core.sim.trace import Trace, compressibility_of
@@ -87,10 +96,8 @@ class Engine:
 # engines cannot drift apart on the float expressions that decide completion
 # times, fluid shares, placement, or selection-unit behaviour.  Any change
 # here changes BOTH engines identically (and the committed goldens).
-
-# inflight-page utilization below which pages drain fast (paper §3-II/III:
-# the selection unit and the compression trigger both key off this)
-PAGE_FAST = 0.3
+# PAGE_FAST and selection_races_line live in controller.py since the
+# MovementController refactor (§2.12) and are re-exported above.
 
 
 def fifo_finish(start: float, size: float, bw: float,
@@ -142,13 +149,6 @@ def mc_place(page: int, n_mcs: int, mode: str) -> int:
     if mode == "hash":  # Fibonacci hash: immune to power-of-two strides
         return (((page * 0x9E3779B1) & 0xFFFFFFFF) >> 7) % n_mcs
     return page % n_mcs
-
-
-def selection_races_line(lu: float, pu: float) -> bool:
-    """Adaptive selection unit (paper §3-II): race a line for a coalesced
-    miss only when the page queue is congested (the line is the
-    critical-path fast path) and the line buffer has room."""
-    return pu > PAGE_FAST and lu < 1.0
 
 
 # --------------------------------------------------------------------------
@@ -735,6 +735,10 @@ class CCState:
     # its own stream, so the draw count of one CC (or scheme) cannot perturb
     # another CC's ratios through global event order
     rng: Optional[np.random.Generator] = None
+    # this CC's MovementController (§2.12): the selection/throttle/
+    # compression decision state-machine; always set at construction
+    # (resolve_controller: policy component > cfg.controller > 'fixed')
+    ctrl: object = None
     pending_lines: Dict[int, List[Request]] = field(default_factory=dict)
     pending_pages: Dict[int, List[Request]] = field(default_factory=dict)
     retry: deque = field(default_factory=deque)
@@ -818,12 +822,15 @@ class Simulator:
             # CC 0 keeps the legacy RNG stream (single-CC bit-parity); CC
             # i>0 gets an independent stream keyed by (seed, idx) so ratios
             # are a function of the CC's own draw count only
+            pol = self.policies[i] if self.policies else self.policy
             self.ccs.append(CCState(
                 idx=i, workload=w, cores=cores, local=local, m=m,
                 comp_base=compressibility_of(w if len(parts) > 1 else workload),
-                policy=(self.policies[i] if self.policies else self.policy),
+                policy=pol,
                 rng=(np.random.default_rng(seed + 17) if i == 0
                      else np.random.default_rng((seed + 17, i))),
+                ctrl=make_controller(resolve_controller(pol, cfg), cfg,
+                                     w if len(parts) > 1 else workload),
             ))
         self.cores = [c for cc in self.ccs for c in cc.cores]
         n_ccs = len(self.ccs)
@@ -1121,13 +1128,13 @@ class Simulator:
         raw = cfg.page_bytes + cfg.header_bytes
         size = raw
         extra = 0.0
-        # Link compression (paper §3-III): engaged when the inflight page
-        # buffer signals congestion (bandwidth-bound regime).  The compressor
-        # is streaming, so only the pipeline fill (~1/4 of the full pass)
+        # Link compression (paper §3-III): engaged when the controller
+        # signals congestion (for 'fixed', the inflight page buffer past
+        # PAGE_FAST — the bandwidth-bound regime).  The compressor is
+        # streaming, so only the pipeline fill (~1/4 of the full pass)
         # sits on the critical path; the rest overlaps transmission.
-        _, pu = self._buf_utils(cc)
         if (cc.policy.compression != "off" and cfg.compress
-                and pu > self.PAGE_FAST):
+                and cc.ctrl.decide(self._obs(cc, mc, t)).compress):
             ratio = self.comp_ratio(cc)
             size = cfg.page_bytes / ratio + cfg.header_bytes
             extra = cfg.comp_lat / 4
@@ -1163,8 +1170,7 @@ class Simulator:
         compress = cc.policy.compression != "off" and cfg.compress
         if self.uplinks is None:
             link = self.links[mc]
-            _, pu = self._buf_utils(cc)
-            if compress and pu > self.PAGE_FAST:
+            if compress and cc.ctrl.decide(self._obs(cc, mc, t)).compress:
                 ratio = self.comp_ratio(cc)
                 size = cfg.page_bytes / ratio + cfg.header_bytes
                 extra = cfg.comp_lat / 4
@@ -1175,7 +1181,9 @@ class Simulator:
                         lambda tt: link.send(tt, size, lambda a: None, "page", cc.idx))
             return
         up = self.uplinks[mc]
-        if compress and up.backlog(t) > cfg.page_bytes:
+        lu, pu = self._buf_utils(cc)
+        if compress and cc.ctrl.decide(
+                Observation(t, lu, pu, up.backlog(t))).compress_writeback:
             ratio = self.comp_ratio(cc)
             size = cfg.page_bytes / ratio + cfg.header_bytes
             extra = cfg.comp_lat / 4
@@ -1186,6 +1194,7 @@ class Simulator:
 
     # ---------------- arrivals ----------------
     def _on_line_arrival(self, cc: CCState, line: int, t: float):
+        cc.ctrl.observe_line(t)
         reqs = cc.pending_lines.pop(line, [])
         for r in reqs:
             if not r.done:
@@ -1194,6 +1203,7 @@ class Simulator:
         self._drain_retry(cc, t)
 
     def _on_page_arrival(self, cc: CCState, page: int, t: float):
+        cc.ctrl.observe_page(t)
         self._insert_page(cc, page, t)
         reqs = cc.pending_pages.pop(page, [])
         for r in reqs:
@@ -1208,36 +1218,49 @@ class Simulator:
         pu = len(cc.pending_pages) / self.cfg.inflight_pages
         return lu, pu
 
-    PAGE_FAST = PAGE_FAST  # module constant, see the pure-math block above
+    def _obs(self, cc: CCState, mc: int, t: float) -> Observation:
+        """The controller's observation vector at a decision point.  The
+        uplink backlog (toward MC ``mc``) is computed only for controllers
+        that declare ``needs_uplink`` — a link-heap scan stays off the
+        miss hot path under the default 'fixed' controller."""
+        lu, pu = self._buf_utils(cc)
+        ub = 0.0
+        if cc.ctrl.needs_uplink and self.uplinks is not None:
+            ub = self.uplinks[mc].backlog(t)
+        return Observation(t, lu, pu, ub)
 
     def _composed_miss(self, cc: CCState, core: Core, line: int, wr: bool,
                        t: float) -> Optional[float]:
         """'both'/'adaptive' granularity: issue line and page movements for a
         triggering miss; requests complete on whichever arrives first.
 
-        With ``granularity='adaptive'`` the selection unit (paper §3-II)
-        modulates this from the inflight-buffer utilizations: when the page
-        buffer drains fast (compressed pages, page-friendly phase) redundant
-        line races on coalesced misses are skipped; when it backs up (low
-        locality), coalesced misses race lines on the critical path.  With
-        ``throttle`` the inflight-buffer caps gate issue (pages stop above
-        ``page_throttle_hi``; full buffers park the request in the retry
-        queue).  ``page_carries_requests=False`` is the legacy 'both' race:
-        the line always carries the request, the page is pure prefetch."""
-        cfg, pol = self.cfg, cc.policy
+        The per-CC MovementController (§2.12) makes the decisions.  With
+        ``granularity='adaptive'`` its selection unit (paper §3-II)
+        modulates racing from the observation vector: under 'fixed', when
+        the page buffer drains fast (compressed pages, page-friendly
+        phase) redundant line races on coalesced misses are skipped; when
+        it backs up (low locality), coalesced misses race lines on the
+        critical path.  With ``throttle`` the controller gates issue
+        (under 'fixed': pages stop above ``page_throttle_hi``; full
+        buffers park the request in the retry queue).
+        ``page_carries_requests=False`` is the legacy 'both' race: the
+        line always carries the request, the page is pure prefetch."""
+        pol = cc.policy
         adaptive = pol.granularity == "adaptive"
         page = self.page_of(line)
         req = self._mk_req(core, line, wr, t)
-        lu, pu = self._buf_utils(cc)
+        coalesced = page in cc.pending_pages
+        cc.ctrl.observe_miss(coalesced)
+        d = cc.ctrl.decide(self._obs(cc, self.mc_of(page), t))
 
         # coalesce with an inflight page migration
-        if page in cc.pending_pages:
+        if coalesced:
             if pol.page_carries_requests:
                 cc.pending_pages[page].append(req)
             if line in cc.pending_lines:
                 cc.pending_lines[line].append(req)
             elif adaptive:
-                if selection_races_line(lu, pu):
+                if d.race_line:
                     cc.pending_lines[line] = [req]
                     self._fetch_line_daemon(cc, line, t, req)
             elif not pol.page_carries_requests:
@@ -1248,8 +1271,8 @@ class Simulator:
         # triggering miss: BOTH by default — the line hides page queueing and
         # (de)compression latency, costing only ~80B next to a ~2KB page
         if pol.throttle:
-            issue_page = pu < cfg.page_throttle_hi
-            issue_line = lu < 1.0 or line in cc.pending_lines
+            issue_page = d.issue_page
+            issue_line = d.issue_line or line in cc.pending_lines
             if not issue_line and not issue_page:
                 cc.retry.append(req)  # buffers full: re-issue when one drains
                 return None
@@ -1293,16 +1316,16 @@ class Simulator:
             if req.done:
                 continue
             line = req.addr
-            lu, pu = self._buf_utils(cc)
             page = self.page_of(line)
+            d = cc.ctrl.decide(self._obs(cc, self.mc_of(page), t))
             if line in cc.pending_lines:
                 cc.pending_lines[line].append(req)
             elif page in cc.pending_pages:
                 cc.pending_pages[page].append(req)
-            elif lu < 1.0:
+            elif d.issue_line:
                 cc.pending_lines[line] = [req]
                 self._fetch_line_daemon(cc, line, t, req)
-            elif pu < self.cfg.page_throttle_hi:
+            elif d.issue_page:
                 cc.pending_pages[page] = [req]
                 self._send_page(cc, page, t)
             else:

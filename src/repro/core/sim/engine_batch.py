@@ -54,6 +54,11 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.sim.config import Metrics, SimConfig
+from repro.core.sim.controller import (
+    Observation,
+    make_controller,
+    resolve_controller,
+)
 from repro.core.sim.engine import (
     PAGE_FAST,
     LinkSchedule,
@@ -688,6 +693,13 @@ class _Frame:
         self.pcr = pol.page_carries_requests
         self.throttle = pol.throttle
         self.compress_on = pol.compression != "off" and cfg.compress
+        # movement controller (§2.12): 'fixed' keeps the transcribed inline
+        # expressions verbatim (ctrls[i] = None — no dispatch, no perf cost
+        # on the legacy grids); any other controller gets one instance per
+        # CC and the decision sites route through decide()/observe_*().
+        ctrl_name = resolve_controller(pol, cfg)
+        self.ctrls: List = []
+        self.any_ctrl = ctrl_name != "fixed"
 
         # --- per-CC / per-core state (transcribing Simulator.__init__) ---
         # Each core is one record list, indexed positionally in the hot loop:
@@ -734,6 +746,10 @@ class _Frame:
                 compressibility_of(w if len(parts) > 1 else workload))
             self.rngs.append(np.random.default_rng(seed + 17) if i == 0
                              else np.random.default_rng((seed + 17, i)))
+            self.ctrls.append(
+                make_controller(ctrl_name, cfg,
+                                w if len(parts) > 1 else workload)
+                if self.any_ctrl else None)
             self.pending_lines.append({})
             self.pending_pages.append({})
             self.retry.append(deque())
@@ -852,6 +868,7 @@ class _Frame:
         loc_d = self.loc_d
         loc_cap = self.loc_cap
         miss = self._miss
+        ctrls = self.ctrls if self.any_ctrl else None
         n_ev = 0
         while heap and n_ev < limit:
             t, _, kind, a, b = pop(heap)
@@ -927,6 +944,8 @@ class _Frame:
             elif kind == K_LINE_ARR:
                 # oracle: on_line_arrival (a = cc, b = line): LLC-insert +
                 # complete every waiter, then drain the retry queue
+                if ctrls is not None:
+                    ctrls[a].observe_line(t)
                 reqs = pending_lines[a].pop(b, ())
                 for r in reqs:
                     if not r[4]:
@@ -959,6 +978,8 @@ class _Frame:
                 # oracle: on_page_arrival (a = cc, b = page): install the
                 # page (dirty eviction -> writeback), complete waiters at
                 # t + mem_lat (read from local memory), drain retries
+                if ctrls is not None:
+                    ctrls[a].observe_page(t)
                 loc = loc_d[a]
                 if b in loc:
                     loc.move_to_end(b)
@@ -1074,8 +1095,15 @@ class _Frame:
         lu = len(pl) / self.il
         pu = len(pp) / self.ip
 
-        # coalesce with an inflight page migration
+        # movement controller (§2.12): observe-then-decide, in the
+        # oracle's order; None is the transcribed 'fixed' fast path
         plist = pp.get(page)
+        ctrl = self.ctrls[cc]
+        if ctrl is not None:
+            ctrl.observe_miss(plist is not None)
+            d = ctrl.decide(self._ctrl_obs(ctrl, cc, page, t, lu, pu))
+
+        # coalesce with an inflight page migration
         if plist is not None:
             if self.pcr:
                 plist.append(req)
@@ -1083,7 +1111,8 @@ class _Frame:
             if llist is not None:
                 llist.append(req)
             elif self.adaptive:
-                if selection_races_line(lu, pu):
+                if (selection_races_line(lu, pu) if ctrl is None
+                        else d.race_line):
                     pl[line] = [req]
                     self._fetch_line_daemon(cc, line, t)
             elif not self.pcr:
@@ -1093,8 +1122,12 @@ class _Frame:
 
         # triggering miss: BOTH by default
         if self.throttle:
-            issue_page = pu < self.pth
-            issue_line = lu < 1.0 or line in pl
+            if ctrl is None:
+                issue_page = pu < self.pth
+                issue_line = lu < 1.0 or line in pl
+            else:
+                issue_page = d.issue_page
+                issue_line = d.issue_line or line in pl
             if not issue_line and not issue_page:
                 self.retry[cc].append(req)  # buffers full: park for re-issue
                 return
@@ -1119,6 +1152,7 @@ class _Frame:
         n = len(rq)
         pl = self.pending_lines[cc]
         pp = self.pending_pages[cc]
+        ctrl = self.ctrls[cc]
         for _ in range(n):
             req = rq.popleft()
             if req[R_DONE]:
@@ -1127,15 +1161,17 @@ class _Frame:
             lu = len(pl) / self.il
             pu = len(pp) / self.ip
             page = line // self.lpp
+            if ctrl is not None:
+                d = ctrl.decide(self._ctrl_obs(ctrl, cc, page, t, lu, pu))
             llist = pl.get(line)
             if llist is not None:
                 llist.append(req)
             elif page in pp:
                 pp[page].append(req)
-            elif lu < 1.0:
+            elif (lu < 1.0 if ctrl is None else d.issue_line):
                 pl[line] = [req]
                 self._fetch_line_daemon(cc, line, t)
-            elif pu < self.pth:
+            elif (pu < self.pth if ctrl is None else d.issue_page):
                 pp[page] = [req]
                 self._send_page(cc, page, t)
             else:
@@ -1175,14 +1211,31 @@ class _Frame:
         self._request_flight(cc, mc, t, 0.0, self.links[mc], size, CLS_LINE,
                              ("line", cc, line, mc))
 
+    def _ctrl_obs(self, ctrl, cc: int, page: int, t: float,
+                  lu: float, pu: float) -> Observation:
+        # oracle: Simulator._obs — the uplink backlog (toward the page's
+        # MC) only for controllers that declare needs_uplink
+        ub = 0.0
+        if ctrl.needs_uplink and self.uplinks is not None:
+            mc = mc_place(page, self.nmcs, self.ileave)
+            ub = self.uplinks[mc].backlog(t)
+        return Observation(t, lu, pu, ub)
+
     def _send_page(self, cc: int, page: int, t: float):
         mc = mc_place(page, self.nmcs, self.ileave)
         raw = self.pb_hb
         size = raw
         extra = 0.0
         if self.compress_on:
+            ctrl = self.ctrls[cc]
             pu = len(self.pending_pages[cc]) / self.ip
-            if pu > PAGE_FAST:
+            if ctrl is None:
+                comp = pu > PAGE_FAST
+            else:
+                lu = len(self.pending_lines[cc]) / self.il
+                comp = ctrl.decide(
+                    self._ctrl_obs(ctrl, cc, page, t, lu, pu)).compress
+            if comp:
                 base = self.comp_base[cc]
                 r = self.rngs[cc].normal(base, 0.15 * base)
                 ratio = r if r > 1.0 else 1.0  # max(1.0, r)
@@ -1200,12 +1253,19 @@ class _Frame:
         size = raw
         extra = 0.0
         self.m_wb[cc] += 1
+        ctrl = self.ctrls[cc]
         if self.uplinks is None:
             # legacy: writeback injected into the *downlink* queue
             link = self.links[mc]
             if self.compress_on:
                 pu = len(self.pending_pages[cc]) / self.ip
-                if pu > PAGE_FAST:
+                if ctrl is None:
+                    comp = pu > PAGE_FAST
+                else:
+                    lu = len(self.pending_lines[cc]) / self.il
+                    comp = ctrl.decide(
+                        self._ctrl_obs(ctrl, cc, page, t, lu, pu)).compress
+                if comp:
                     base = self.comp_base[cc]
                     r = self.rngs[cc].normal(base, 0.15 * base)
                     ratio = r if r > 1.0 else 1.0
@@ -1216,7 +1276,14 @@ class _Frame:
             self._push(t + extra, K_WBSEND, link, (size, cc))
             return
         up = self.uplinks[mc]
-        if self.compress_on and up.backlog(t) > self.pb:
+        if ctrl is None:
+            comp = self.compress_on and up.backlog(t) > self.pb
+        else:
+            lu = len(self.pending_lines[cc]) / self.il
+            pu = len(self.pending_pages[cc]) / self.ip
+            comp = self.compress_on and ctrl.decide(
+                Observation(t, lu, pu, up.backlog(t))).compress_writeback
+        if comp:
             base = self.comp_base[cc]
             r = self.rngs[cc].normal(base, 0.15 * base)
             ratio = r if r > 1.0 else 1.0

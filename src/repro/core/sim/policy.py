@@ -27,6 +27,8 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 from typing import Callable, Dict, Optional, Tuple, Union
 
+from repro.core.sim.controller import available_controllers
+
 GRANULARITIES = ("none", "line", "page", "both", "adaptive")
 PARTITIONINGS = ("fifo", "dual")
 COMPRESSIONS = ("off", "link")
@@ -79,6 +81,12 @@ class MovementPolicy:
         is pure prefetch.  Only meaningful for ``both`` granularity.
     line_share — per-policy override of ``SimConfig.line_share`` for
         ``dual`` partitioning (``None`` = use the config's value).
+    controller — the registered :class:`MovementController` driving this
+        policy's selection/throttle/compression decisions (DESIGN.md
+        §2.12).  ``None`` (default) follows ``SimConfig.controller``,
+        which itself defaults to the legacy ``fixed`` constants; an
+        explicit name here wins over the config (the serving layer's
+        per-pool overrides ride this precedence).
     """
 
     name: str
@@ -91,6 +99,7 @@ class MovementPolicy:
     free_transfers: bool = False
     page_carries_requests: bool = True
     line_share: Optional[float] = None
+    controller: Optional[str] = None
     description: str = ""
 
     def __post_init__(self):
@@ -128,6 +137,12 @@ class MovementPolicy:
             raise ValueError(
                 f"policy {self.name!r}: line_share={self.line_share} "
                 f"must be in (0, 1)")
+        if self.controller is not None and \
+                self.controller not in available_controllers():
+            raise ValueError(
+                f"policy {self.name!r}: controller={self.controller!r} "
+                f"not registered; choose from {available_controllers()} "
+                f"(or None to follow SimConfig.controller)")
 
     @property
     def moves_pages(self) -> bool:
@@ -155,6 +170,7 @@ class MovementPolicy:
             "free_transfers": self.free_transfers,
             "page_carries_requests": self.page_carries_requests,
             "line_share": self.line_share,
+            "controller": self.controller,
         }
 
 

@@ -12,6 +12,7 @@ out over a process pool (results are identical to the serial run).
   fig6_ablation(...) ablation policies x workloads (synergy decomposition)
   fig7_uplink(...) uplink_bw x write-heavy workload x n_ccs (uplink contention)
   fig8_kernels(...) captured Pallas-kernel streams x policy x bandwidth
+  fig11_controllers(...) movement controller x scheme on the fig6/7/8 grids
   paper_claims(...) geomean speedups of daemon over page
 
 Schemes and workloads are registry names (policy.py / trace.py); every
@@ -734,6 +735,138 @@ def fig10_topology(
         rows.append({"workload": "geomean", "topology": "two_tier",
                      "oversub": o, "speedup": geomean(ratios)})
     return rows
+
+
+# the fig11 controller grids (DESIGN.md §2.12): the registered movement
+# controllers compared head-to-head on the three grids where the selection
+# unit's decisions bind — the synthetic ablation suite, the asymmetric
+# uplink grid, and the captured Pallas-kernel streams
+CONTROLLERS = ("fixed", "adaptive", "tuned")
+# fig11 compares the controllers inside the daemon scheme against the page
+# baseline; the ablation policies are fig6's concern, not fig11's
+CONTROLLER_SCHEMES = ("page", "daemon")
+
+
+def fig11_ablation_spec(
+    workloads: Iterable[str] = ABLATION_WORKLOADS,
+    controllers: Iterable[str] = CONTROLLERS,
+    *,
+    cfg: Optional[SimConfig] = None,
+    **kw,
+) -> Sweep:
+    """Controller x workload on fig6's congested synthetic grid (DESIGN.md
+    §2.12): the guardrail half of fig11 — a controller that loses to
+    'fixed' here trades away the paper's headline speedups.  Shared by the
+    API and benchmarks/fig11_controllers.py so the
+    'daemon_vs_page_geomean@ctrl=*' BENCH_sim.json entries have one
+    meaning."""
+    axes = {
+        "workload": tuple(workloads),
+        "controller": tuple(controllers),
+        "scheme": CONTROLLER_SCHEMES,
+    }
+    return Sweep(name="fig11_ablation", axes=axes,
+                 base=cfg or SimConfig(link_bw_frac=0.125), **_sweep_kw(kw))
+
+
+def fig11_uplink_spec(
+    workloads: Iterable[str] = UPLINK_WORKLOADS,
+    uplink_fracs: Iterable[float] = UPLINK_FRACS,
+    controllers: Iterable[str] = CONTROLLERS,
+    *,
+    cfg: Optional[SimConfig] = None,
+    **kw,
+) -> Sweep:
+    """Controller x uplink asymmetry on fig7's write-heavy grid: where the
+    adaptive controller's uplink-backlog signal (compress writebacks before
+    the reverse path saturates) can actually pay."""
+    base = cfg or SimConfig()
+    axes = {
+        "workload": tuple(workloads),
+        "uplink_bw": tuple(base.link_bw * f for f in uplink_fracs),
+        "controller": tuple(controllers),
+        "scheme": CONTROLLER_SCHEMES,
+    }
+    return Sweep(name="fig11_uplink", axes=axes, base=base, **_sweep_kw(kw))
+
+
+def fig11_kernels_spec(
+    workloads: Iterable[str] = KERNEL_WORKLOADS,
+    bw_fracs: Iterable[float] = KERNEL_BW_FRACS,
+    controllers: Iterable[str] = CONTROLLERS,
+    *,
+    cfg: Optional[SimConfig] = None,
+    **kw,
+) -> Sweep:
+    """Controller x bandwidth on fig8's captured Pallas-kernel streams: the
+    upside half of fig11 — the page-dense phases where 'fixed' keeps racing
+    lines it always loses and an observing controller can back off."""
+    axes = {
+        "workload": tuple(workloads),
+        "link_bw_frac": tuple(bw_fracs),
+        "controller": tuple(controllers),
+        "scheme": CONTROLLER_SCHEMES,
+    }
+    return Sweep(name="fig11_kernels", axes=axes, base=cfg or SimConfig(),
+                 **_sweep_kw(kw))
+
+
+def fig11_geomeans(
+    ab: SweepResult, up: SweepResult, kn: SweepResult,
+) -> Dict[str, float]:
+    """Derived daemon-vs-page geomeans per controller from executed fig11
+    grids — the single source of the 'daemon_vs_page_geomean@ctrl=*' ledger
+    keys (gated by benchmarks/check_bench.py), shared by
+    :func:`fig11_controllers` and benchmarks/fig11_controllers.py.
+
+    Per controller ``c``: ``@ctrl={c}`` (synthetic ablation suite),
+    ``@ctrl={c}:grid=uplink`` (write-heavy uplink grid), and one
+    ``@ctrl={c}:kernel={w}`` per captured kernel (geomean across the
+    bandwidth range).  'fixed' rows must reproduce the controller-free
+    grids bit-for-bit; 'adaptive' must clear the fixed kernel baselines on
+    at least one captured stream without giving back the synthetics."""
+    out: Dict[str, float] = {}
+    ga = ab.grid("workload", "controller", "scheme")
+    gu = up.grid("workload", "uplink_bw", "controller", "scheme")
+    gk = kn.grid("workload", "link_bw_frac", "controller", "scheme")
+    for c in ab.axes["controller"]:
+        out[f"daemon_vs_page_geomean@ctrl={c}"] = geomean(
+            ga[(w, c, "page")].metrics.cycles
+            / ga[(w, c, "daemon")].metrics.cycles
+            for w in ab.axes["workload"])
+        out[f"daemon_vs_page_geomean@ctrl={c}:grid=uplink"] = geomean(
+            gu[(w, ub, c, "page")].metrics.cycles
+            / gu[(w, ub, c, "daemon")].metrics.cycles
+            for w in up.axes["workload"] for ub in up.axes["uplink_bw"])
+        for w in kn.axes["workload"]:
+            out[f"daemon_vs_page_geomean@ctrl={c}:kernel={w}"] = geomean(
+                gk[(w, bw, c, "page")].metrics.cycles
+                / gk[(w, bw, c, "daemon")].metrics.cycles
+                for bw in kn.axes["link_bw_frac"])
+    return out
+
+
+def fig11_controllers(
+    controllers: Iterable[str] = CONTROLLERS,
+    *,
+    cfg: Optional[SimConfig] = None,
+    workers: Optional[int] = None,
+    **kw,
+) -> Dict[str, float]:
+    """Head-to-head movement controllers (DESIGN.md §2.12): daemon-vs-page
+    geomeans per controller over the synthetic ablation suite, the
+    asymmetric-uplink grid, and the captured kernel streams.  The headline:
+    'fixed' reproduces every legacy number exactly, 'adaptive' buys back
+    the kernel traces (where fixed granularity racing loses) at <5% cost on
+    the synthetics, 'tuned' shows the offline-fitted ceiling."""
+    kw2 = dict(kw)
+    ab = run_sweep(fig11_ablation_spec(controllers=controllers, cfg=cfg,
+                                       **dict(kw2)), workers=workers)
+    up = run_sweep(fig11_uplink_spec(controllers=controllers, cfg=cfg,
+                                     **dict(kw2)), workers=workers)
+    kn = run_sweep(fig11_kernels_spec(controllers=controllers, cfg=cfg,
+                                      **dict(kw2)), workers=workers)
+    return fig11_geomeans(ab, up, kn)
 
 
 def paper_claims(

@@ -288,10 +288,21 @@ class ServingScheduler:
                 "per-pool policy overrides (serving_prefill_policy / "
                 "serving_decode_policy) need a disaggregated router with "
                 f"disjoint pools; router {self.router.name!r} shares CCs")
+        pre_ctrl = cfg.serving_prefill_controller
+        dec_ctrl = cfg.serving_decode_controller
+        if (pre_ctrl or dec_ctrl) and not self.router.handoff:
+            raise ValueError(
+                "per-pool controller overrides (serving_prefill_controller /"
+                " serving_decode_controller) need a disaggregated router "
+                f"with disjoint pools; router {self.router.name!r} shares CCs")
         pset = set(self.prefill_pool)
-        if pre_over or dec_over:
+        if pre_over or dec_over or pre_ctrl or dec_ctrl:
             pp = get_policy(pre_over) if pre_over else base_pol
             dp = get_policy(dec_over) if dec_over else base_pol
+            if pre_ctrl:
+                pp = pp.with_(controller=pre_ctrl)
+            if dec_ctrl:
+                dp = dp.with_(controller=dec_ctrl)
             policies: object = [pp if c in pset else dp for c in range(n_ccs)]
         else:
             policies = base_pol

@@ -32,6 +32,7 @@ from dataclasses import asdict, dataclass
 from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.sim.config import Metrics, SimConfig
+from repro.core.sim.controller import get_controller
 from repro.core.sim.engine import simulate
 from repro.core.sim.engine_batch import BatchCell, covers, run_batch
 from repro.core.sim.policy import MovementPolicy, get_policy
@@ -169,6 +170,11 @@ class Sweep:
         for r in self.axes.get("serving_router", ()):
             if r is not None:
                 get_router(r)
+        for ax in ("controller", "serving_prefill_controller",
+                   "serving_decode_controller"):
+            for c in self.axes.get(ax, ()):
+                if c is not None:
+                    get_controller(c)
         object.__setattr__(self, "axes", {k: tuple(v) for k, v in self.axes.items()})
 
     def cells(self) -> List[Dict[str, Any]]:

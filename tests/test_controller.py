@@ -1,0 +1,314 @@
+"""MovementController layer tests (DESIGN.md §2.12): fixed-controller
+bit-parity with the pre-refactor goldens, batch-vs-python parity on
+controller grids, registry fail-fast across every entry point, the
+adaptive controller's monotone-backoff property, and the PAGE_FAST
+drift-lock (the threshold lives in controller.py and nowhere else)."""
+import pytest
+
+from conftest import given, settings, st  # hypothesis-or-fallback shim
+
+from repro.core.sim import (
+    MovementPolicy,
+    SimConfig,
+    Simulator,
+    Sweep,
+    available_controllers,
+    get_controller,
+    get_policy,
+    make_controller,
+    register_controller,
+    resolve_controller,
+    run_one,
+    run_sweep,
+    unregister_controller,
+)
+from repro.core.sim import controller as ctrl_mod
+from repro.core.sim import engine as engine_mod
+from repro.core.sim.controller import (
+    PAGE_FAST,
+    AdaptiveController,
+    Decision,
+    FixedController,
+    MovementController,
+    Observation,
+    selection_races_line,
+)
+from test_multicc import GOLD, GOLD_MCC, N
+
+
+# --------------------------------------------------------------------------
+# fixed controller: bit-parity with the pre-refactor goldens
+# --------------------------------------------------------------------------
+
+
+def test_explicit_fixed_controller_reproduces_goldens():
+    """cfg.controller='fixed' is the same simulation as the default (None):
+    every pre-refactor single-CC golden reproduces bit-for-bit across all
+    six schemes."""
+    cfg = SimConfig(link_bw_frac=0.25, controller="fixed")
+    for key, exp in GOLD.items():
+        w, s = key.split("/")
+        m = run_one(w, s, cfg, seed=1, n_accesses=N)
+        for name, v in exp.items():
+            assert getattr(m, name) == v, (key, name)
+
+
+def test_explicit_fixed_controller_reproduces_multicc_goldens():
+    cfg = SimConfig(link_bw_frac=0.25, n_ccs=2, controller="fixed")
+    for key, exp in GOLD_MCC.items():
+        w, s = key.split("/")
+        m = run_one(w, s, cfg, seed=1, n_accesses=N)
+        for name, v in exp.items():
+            assert getattr(m, name) == v, (key, name)
+
+
+def test_policy_controller_component_overrides_config():
+    """MovementPolicy.controller beats SimConfig.controller (the serving
+    per-pool override path); both routes to 'fixed' match the default."""
+    cfg = SimConfig(link_bw_frac=0.25)
+    base = run_one("pr", "daemon", cfg, seed=1, n_accesses=2000)
+    pol = get_policy("daemon").with_(controller="fixed")
+    via_policy = run_one("pr", pol, cfg.with_(controller="adaptive"),
+                         seed=1, n_accesses=2000)
+    assert base.cycles == via_policy.cycles
+    assert base.net_bytes == via_policy.net_bytes
+
+
+# --------------------------------------------------------------------------
+# engine parity: the batch core and the oracle agree under every controller
+# --------------------------------------------------------------------------
+
+
+def test_batch_python_parity_on_controller_grid():
+    """Controller cells stay batch-covered and bit-identical between the
+    lockstep batch core and the per-cell oracle."""
+    from repro.core.sim import covers
+
+    for ctrl in ("adaptive", "tuned"):
+        cfg = SimConfig(link_bw_frac=0.25, controller=ctrl)
+        assert covers(cfg, "daemon")
+        sw = {
+            eng: Sweep(name="ctrl_parity", engine=eng, base=cfg,
+                       n_accesses=2000,
+                       axes={"scheme": ("daemon", "page", "both"),
+                             "workload": ("pr", "st"), "seed": (1,)})
+            for eng in ("python", "batch")
+        }
+        a = run_sweep(sw["python"])
+        b = run_sweep(sw["batch"])
+        for ra, rb in zip(a.rows, b.rows):
+            assert ra.axes == rb.axes
+            assert ra.metrics.as_dict() == rb.metrics.as_dict(), \
+                (ctrl, ra.axes)
+
+
+def test_batch_python_parity_multicc_adaptive():
+    cfg = SimConfig(link_bw_frac=0.25, n_ccs=2, controller="adaptive")
+    mk = lambda eng: Sweep(name="ctrl_parity_mcc", engine=eng, base=cfg,
+                           n_accesses=2000,
+                           axes={"scheme": ("daemon",),
+                                 "workload": ("pr+st",), "seed": (1,)})
+    a = run_sweep(mk("python"))
+    b = run_sweep(mk("batch"))
+    assert a.rows[0].metrics.as_dict() == b.rows[0].metrics.as_dict()
+
+
+# --------------------------------------------------------------------------
+# registry fail-fast: every entry point rejects unknown controller names
+# --------------------------------------------------------------------------
+
+
+def test_get_controller_unknown_lists_choices():
+    with pytest.raises(KeyError, match="adaptive"):
+        get_controller("nope")
+
+
+def test_config_validates_controller_names():
+    with pytest.raises(ValueError, match="controller"):
+        SimConfig(controller="nope")
+    with pytest.raises(ValueError, match="controller"):
+        SimConfig(serving_prefill_controller="nope")
+    with pytest.raises(ValueError, match="controller"):
+        SimConfig(serving_decode_controller="nope")
+
+
+def test_policy_validates_controller_component():
+    with pytest.raises(ValueError, match="controller"):
+        get_policy("daemon").with_(controller="nope")
+
+
+def test_sweep_validates_controller_axis():
+    with pytest.raises(KeyError, match="nope"):
+        Sweep(name="bad", axes={"scheme": ("daemon",),
+                                "workload": ("pr",),
+                                "controller": ("fixed", "nope")})
+
+
+def test_register_controller_rejects_duplicates_and_unnamed():
+    class Dup(FixedController):
+        name = "fixed"
+
+    with pytest.raises(ValueError, match="already registered"):
+        register_controller(Dup)
+
+    class NoName(MovementController):
+        pass
+
+    with pytest.raises(ValueError, match="no name"):
+        register_controller(NoName)
+
+
+def test_register_unregister_roundtrip():
+    @register_controller
+    class Temp(FixedController):
+        name = "temp_ctrl"
+        description = "test-only"
+
+    try:
+        assert "temp_ctrl" in available_controllers()
+        m = run_one("pr", "daemon",
+                    SimConfig(link_bw_frac=0.25, controller="temp_ctrl"),
+                    seed=1, n_accesses=2000)
+        base = run_one("pr", "daemon", SimConfig(link_bw_frac=0.25),
+                       seed=1, n_accesses=2000)
+        assert m.cycles == base.cycles  # Temp decides exactly like fixed
+    finally:
+        unregister_controller("temp_ctrl")
+    assert "temp_ctrl" not in available_controllers()
+
+
+def test_resolve_controller_precedence():
+    cfg = SimConfig(controller="adaptive")
+    pol = get_policy("daemon")
+    assert resolve_controller(pol, cfg) == "adaptive"
+    assert resolve_controller(pol.with_(controller="tuned"), cfg) == "tuned"
+    assert resolve_controller(pol, SimConfig()) == "fixed"
+
+
+def test_serving_pool_controller_overrides_need_disjoint_pools():
+    from repro.core.sim import ServingScheduler
+
+    cfg = SimConfig(n_ccs=2, serving_router="least_loaded",
+                    serving_prefill_controller="adaptive")
+    with pytest.raises(ValueError, match="disjoint pools"):
+        ServingScheduler(cfg, "daemon", seed=0)
+
+
+def test_serving_pool_controller_overrides_apply():
+    from repro.core.sim import ServingScheduler
+
+    cfg = SimConfig(n_ccs=2, serving_router="disagg_prefill",
+                    serving_prefill_controller="adaptive",
+                    serving_decode_controller="tuned",
+                    n_requests=4, prefill_accesses=128, decode_steps=2,
+                    decode_accesses=64)
+    sched = ServingScheduler(cfg, "daemon", seed=0)
+    kinds = {type(cc.ctrl).name for cc in sched.sim.ccs}
+    assert kinds == {"adaptive", "tuned"}
+
+
+# --------------------------------------------------------------------------
+# PAGE_FAST drift-lock: one source of truth
+# --------------------------------------------------------------------------
+
+
+def test_page_fast_single_source_of_truth():
+    """The selection threshold lives in controller.py; engine.py re-exports
+    the same object and the Simulator class no longer carries its own
+    copy (the pre-refactor duplicate)."""
+    assert PAGE_FAST == 0.3
+    assert engine_mod.PAGE_FAST is ctrl_mod.PAGE_FAST
+    assert engine_mod.selection_races_line is ctrl_mod.selection_races_line
+    assert "PAGE_FAST" not in Simulator.__dict__
+
+
+# --------------------------------------------------------------------------
+# adaptive controller properties
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=40)
+@given(lu=st.floats(0.0, 1.5), pu=st.floats(0.0, 1.5),
+       density=st.floats(0.0, 1.0), backlog=st.floats(0.0, 1 << 16))
+def test_adaptive_race_is_subset_of_fixed(lu, pu, density, backlog):
+    """Adaptive only ever *suppresses* races: whenever adaptive races a
+    line, fixed would have raced it too, and every other decision field
+    matches fixed exactly (throttle/compression are untouched)."""
+    cfg = SimConfig()
+    fx = make_controller("fixed", cfg)
+    ad = make_controller("adaptive", cfg)
+    ad.density = density
+    obs = Observation(0.0, lu, pu, backlog)
+    df, da = fx.decide(obs), ad.decide(obs)
+    assert isinstance(da, Decision)
+    if da.race_line:
+        assert df.race_line
+    assert da.issue_line == df.issue_line
+    assert da.issue_page == df.issue_page
+    assert da.compress == df.compress
+    assert da.compress_writeback == df.compress_writeback
+
+
+@settings(max_examples=20)
+@given(lu=st.floats(0.0, 0.99), pu=st.floats(0.31, 1.0),
+       d_lo=st.floats(0.0, 1.0), d_hi=st.floats(0.0, 1.0))
+def test_adaptive_backoff_is_monotone_in_density(lu, pu, d_lo, d_hi):
+    """Raising the coalesce density never turns racing back ON: the
+    backoff is monotone (no flapping around the threshold from above)."""
+    d_lo, d_hi = min(d_lo, d_hi), max(d_lo, d_hi)
+    cfg = SimConfig()
+    obs = Observation(0.0, lu, pu, 0.0)
+    ad = make_controller("adaptive", cfg)
+    ad.density = d_lo
+    race_lo = ad.decide(obs).race_line
+    ad.density = d_hi
+    race_hi = ad.decide(obs).race_line
+    assert race_hi <= race_lo
+    assert selection_races_line(lu, pu)  # the fixed rule always races here
+
+
+def test_adaptive_density_ewma_converges():
+    ad = AdaptiveController(SimConfig())
+    for _ in range(600):
+        ad.observe_miss(True)
+    assert ad.density > AdaptiveController.race_backoff
+    obs = Observation(0.0, 0.5, 0.5, 0.0)
+    assert not ad.decide(obs).race_line
+    for _ in range(600):
+        ad.observe_miss(False)
+    assert ad.density < AdaptiveController.race_backoff
+    assert ad.decide(obs).race_line
+
+
+def test_adaptive_identical_to_fixed_on_sparse_synthetics():
+    """On a sparse synthetic source the density never crosses the backoff,
+    so 'adaptive' is decision-identical to 'fixed' — the guardrail that
+    keeps the paper's headline geomeans intact."""
+    base = run_one("pr", "daemon", SimConfig(link_bw_frac=0.25),
+                   seed=1, n_accesses=4000)
+    ad = run_one("pr", "daemon",
+                 SimConfig(link_bw_frac=0.25, controller="adaptive"),
+                 seed=1, n_accesses=4000)
+    assert ad.cycles == base.cycles
+    assert ad.net_bytes == base.net_bytes
+
+
+def test_tuned_thresholds_substitute_into_fixed_formulas():
+    cfg = SimConfig()
+    tc = make_controller("tuned", cfg, "st")
+    pf, th = ctrl_mod.TUNED_THRESHOLDS["st"]
+    assert tc.thresholds() == {"page_fast": pf, "throttle_hi": th}
+    d = tc.decide(Observation(0.0, 0.5, (pf + th) / 2, 0.0))
+    assert d.race_line and d.compress and d.issue_page == ((pf + th) / 2 < th)
+    # unknown workloads fall back to the fixed constants
+    fb = make_controller("tuned", cfg, "no_such_workload")
+    assert fb.thresholds() == {"page_fast": PAGE_FAST,
+                               "throttle_hi": cfg.page_throttle_hi}
+
+
+def test_controller_policy_component_listed():
+    """MovementPolicy.components() exposes the controller slot so
+    run.py --list and policy introspection see it."""
+    pol = get_policy("daemon").with_(controller="adaptive")
+    assert pol.components()["controller"] == "adaptive"
+    assert get_policy("daemon").components()["controller"] is None
