@@ -6,7 +6,7 @@ tolerance (default 5%).  The committed BENCH_sim.json is the output of the
 exact CI command::
 
     PYTHONPATH=src python benchmarks/run.py --quick --engine batch \
-        --only fig2,fig4_top,fig4_bottom,sweep_jitter,sweep_nmcs,fig5,fig6,fig7,fig7_wshare,fig8,fig9,fig10,fig11,engine_bench
+        --only fig2,fig4_top,fig4_bottom,sweep_jitter,sweep_nmcs,fig5,fig6,fig7,fig7_wshare,fig8,fig9,fig10,fig11,fig12,engine_bench
 
 so CI can regenerate it deterministically and fail the workflow when a
 code change moves any geomean by more than the tolerance — in EITHER
@@ -16,7 +16,9 @@ be regenerated alongside the change.  Gated keys are the derived
 ``daemon_vs_page_geomean@topo=<t>`` and
 ``...@topo=two_tier:oversub=<o>`` and the fig11 movement-controller keys
 ``daemon_vs_page_geomean@ctrl=<c>`` / ``...@ctrl=<c>:grid=uplink`` /
-``...@ctrl=<c>:kernel=<w>``, matched by the same prefix — the fig6
+``...@ctrl=<c>:kernel=<w>`` and the fig12 memory-pool keys
+``daemon_vs_page_geomean@mem={inf|<capacity>}:place=<placement>``
+(DESIGN.md §2.13), matched by the same prefix — the fig6
 ablation ``policy_vs_page_geomean@<policy>`` entries, and the fig9
 serving tail ratios ``daemon_vs_page_p99@load=<L>:tenant=<T>``.  The ``wall_*``
 throughput keys (and the ``engine``/``workers``/``wall_s`` entry fields)

@@ -1,0 +1,69 @@
+"""Memory-pool grid (fig12, DESIGN.md §2.13): finite per-MC capacity,
+first-class placement policies, and hot-page churn under multi-tenant
+'+'-mixes — the scenario family the paper never swept (its evaluation
+treats remote memory as an infinite passive address space).
+
+One declarative Sweep: tenant mix x placement (page / first_touch /
+capacity_aware) x capacity pressure (infinite / mild / heavy) x scheme,
+with four CCs contending for four finite MCs.  The derived daemon-vs-page
+geomeans per (capacity, placement) cell merge into BENCH_sim.json under
+``daemon_vs_page_geomean@mem={inf|<cap>}:place=<p>`` and are gated in CI
+by check_bench.py.
+
+The headline question: do DaeMon's decoupled granularities hold their
+advantage when page migration also triggers capacity evictions?  The
+``@mem=inf`` rows pin the legacy infinite-pool behaviour (placement still
+varies the MC mapping); the ``@mem=128`` rows are eviction-dominated —
+every migrated page can push a cold resident out through the contended
+uplink.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core.sim import (
+    default_workers,
+    fig12_geomeans,
+    fig12_memside_spec,
+    run_sweep,
+    write_bench,
+)
+
+from benchmarks import BENCH_PATH
+
+
+def run(n_accesses: int = 20_000, workers: int | None = None,
+        engine: str = "python",
+        bench_path: str = BENCH_PATH):
+    workers = default_workers() if workers is None else workers
+    sw = fig12_memside_spec(n_accesses=n_accesses)
+    res = run_sweep(sw, workers=workers, engine=engine)
+    derived = fig12_geomeans(res)
+    write_bench(bench_path, res, derived=derived)
+    per_call = res.us_per_call
+    rows = []
+    for k, v in derived.items():
+        suffix = k.split("@mem=", 1)[1]
+        rows.append((f"fig12/{suffix}", per_call, f"speedup={v:.3f}"))
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--n-accesses", type=int, default=20_000)
+    ap.add_argument("--engine", choices=("python", "batch"),
+                    default="python")
+    args = ap.parse_args()
+    for tag, us, derived in run(args.n_accesses, args.workers,
+                                engine=args.engine):
+        print(f"{tag},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,12 +21,14 @@ def list_registries(section_names) -> None:
     from repro.capture import CAPTURED, capture_meta
     from repro.core.sim import (
         available_controllers,
+        available_placements,
         available_policies,
         available_topologies,
         available_workloads,
         build_topology,
         compressibility_of,
         get_controller,
+        get_placement,
         get_policy,
         get_workload,
         topology_description,
@@ -72,6 +74,10 @@ def list_registries(section_names) -> None:
         c = get_controller(name)(_cfg)
         th = ",".join(f"{k}={v}" for k, v in sorted(c.thresholds().items()))
         print(f"  {name:18s} {th:44s} {c.description}")
+    print("placements (name: allocator, description — DESIGN.md §2.13):")
+    for name in available_placements():
+        p = get_placement(name)
+        print(f"  {name:18s} {p.allocator:44s} {p.description}")
     print("topologies (name: ports/hops at 2 CCs x 2 MCs, description — "
           "DESIGN.md §2.11):")
     for name in available_topologies():
@@ -99,6 +105,7 @@ def main() -> None:
         fig9_serving,
         fig10_topology,
         fig11_controllers,
+        fig12_memside,
         roofline,
     )
 
@@ -142,6 +149,9 @@ def main() -> None:
     # fig11 reuses the fig6/fig7 grid sizing for its synthetic halves and
     # 2x that for the captured-kernel half (fig8's sizing rationale)
     n_fig11 = 4_000 if args.quick else 20_000
+    # fig12 needs >= 1000 accesses/thread so the finite pools actually fill
+    # (capacity pressure and eviction churn are the dynamics under test)
+    n_fig12 = 4_000 if args.quick else 20_000
     w = args.workers
     eng = args.engine
     sections = [
@@ -158,6 +168,7 @@ def main() -> None:
         ("fig9", lambda: fig9_serving.run(workers=w, engine=eng, **fig9_kw)),
         ("fig10", lambda: fig10_topology.run(n_accesses=n_fig10, workers=w, engine=eng)),
         ("fig11", lambda: fig11_controllers.run(n_accesses=n_fig11, workers=w, engine=eng)),
+        ("fig12", lambda: fig12_memside.run(n_accesses=n_fig12, workers=w, engine=eng)),
         ("engine_bench", lambda: engine_bench.run(n_accesses=n_fig2)),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),

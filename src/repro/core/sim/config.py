@@ -11,12 +11,17 @@ from typing import Optional
 
 from repro.core.sim.controller import available_controllers
 from repro.core.sim.fabric import available_topologies
+from repro.core.sim.memside import available_placements
 
 # The paper's six schemes, in figure order.  Since the policy registry
 # (policy.py) these are just the six legacy *registered compositions*;
 # `available_policies()` lists every registered policy including ablations.
 SCHEMES = ("local", "page", "page_free", "cacheline", "both", "daemon")
 
+# the legacy static placements (memside.LEGACY_PLACEMENTS): kept for
+# back-compat — mc_interleave now validates against the full placement
+# registry (memside.available_placements), of which these are the subset
+# that keeps the engines on the infinite-memory fast path
 MC_INTERLEAVES = ("page", "hash", "single")
 
 
@@ -47,11 +52,24 @@ class SimConfig:
     link_bw_frac: float = 0.25  # network bw = frac * bus bw (1/2 .. 1/8)
     net_lat: int = 3000  # one-way propagation+protocol (~1 us)
     remote_mem_lat: int = 300  # DRAM access at the MC
-    # page/line -> MC link placement (§2.3 of DESIGN.md):
-    #   "page"   — page-granular modulo interleave (legacy default)
-    #   "hash"   — page-granular multiplicative-hash interleave (stride-proof)
-    #   "single" — all traffic on MC 0 (degenerate shared-FIFO baseline)
+    # page -> MC placement (§2.3 / §2.13 of DESIGN.md): any registered
+    # placement policy (memside.available_placements).  The legacy static
+    # trio ("page" / "hash" / "single") with mc_capacity_pages=None keeps
+    # the infinite-memory fast path, bit-identical to every committed
+    # golden; "first_touch" / "capacity_aware" (or finite capacity) turn
+    # on the memory-side state subsystem.
     mc_interleave: str = "page"
+    # finite per-MC capacity (§2.13): page slots per memory module, backed
+    # by a slab/first-fit allocator with cross-MC spill (charged as extra
+    # fabric hops) and coldest-resident eviction when the pool fills.
+    # ``None`` (default) is the legacy infinite passive address space —
+    # bit-identical to every committed golden.
+    mc_capacity_pages: Optional[int] = None
+    # hot-page dynamics (§2.13, finite capacity only): line fetches to a
+    # still-remote resident before the engines promote it toward the
+    # owning CC's page cache (throttled by the controller's backlog
+    # signal; eviction writebacks ride the §2.7 uplink)
+    mem_hot_threshold: int = 8
 
     # CC->MC uplink (§2.7 of DESIGN.md).  ``None`` (default) is the legacy
     # model: the request path is folded into ``net_lat`` and dirty-page
@@ -140,9 +158,19 @@ class SimConfig:
     def __post_init__(self):
         """Fail-fast validation at config construction time (DESIGN.md §2.1)
         — a bad parameter should never survive until deep inside a sweep."""
-        if self.mc_interleave not in MC_INTERLEAVES:
+        # placements (§2.13) — names resolve against the registry at
+        # construction time, like policies/workloads/topologies
+        if self.mc_interleave not in available_placements():
             raise ValueError(
-                f"mc_interleave={self.mc_interleave!r} not in {MC_INTERLEAVES}")
+                f"mc_interleave={self.mc_interleave!r} not registered; "
+                f"choose from {available_placements()}")
+        if self.mc_capacity_pages is not None and self.mc_capacity_pages < 1:
+            raise ValueError(
+                f"mc_capacity_pages={self.mc_capacity_pages} must be >= 1 "
+                f"(or None for the legacy infinite model)")
+        if self.mem_hot_threshold < 1:
+            raise ValueError(
+                f"mem_hot_threshold={self.mem_hot_threshold} must be >= 1")
         for name, lo in (("n_ccs", 1), ("n_mcs", 1), ("n_cores", 1),
                          ("line_bytes", 1), ("page_bytes", 1), ("mlp", 1)):
             if getattr(self, name) < lo:
@@ -241,6 +269,12 @@ class Metrics:
     # count of stall *episodes* (each time a core's mlp window fills), NOT
     # stalled cycles — see DESIGN.md §2.2
     stall_episodes: float = 0.0
+    # memory-side state counters (§2.13): cell-global (the pool is shared
+    # across CCs, so these are not attributed per CC — per_cc entries
+    # carry zeros); all-zero under the legacy infinite model.
+    mc_spills: int = 0      # allocations that landed off their home MC
+    mc_evictions: int = 0   # cold residents dropped from a full pool
+    mc_promotions: int = 0  # hot-page migrations issued toward a CC
     # multi-CC rollup (§2.5): one entry per CC (cc index, per-CC workload,
     # and the full per-CC counter set); empty for single-CC runs, where the
     # aggregate IS the (only) CC's metrics.
@@ -282,6 +316,9 @@ class Metrics:
             "miss_latency_sum": self.miss_latency_sum,
             "stall_episodes": self.stall_episodes,
             "bytes_saved_compression": self.bytes_saved_compression,
+            "mc_spills": self.mc_spills,
+            "mc_evictions": self.mc_evictions,
+            "mc_promotions": self.mc_promotions,
             "per_cc": self.per_cc,
             "requests_offered": self.requests_offered,
             "requests_completed": self.requests_completed,

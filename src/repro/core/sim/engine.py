@@ -56,6 +56,7 @@ from repro.core.sim.controller import (  # noqa: F401
     selection_races_line,
 )
 from repro.core.sim.fabric import Fabric, PortSpec, build_topology
+from repro.core.sim.memside import make_memside
 from repro.core.sim.policy import get_policy
 from repro.core.sim.trace import Trace, compressibility_of
 
@@ -777,6 +778,12 @@ class Simulator:
         self.workload = workload
         self.eng = Engine()
         self.m = Metrics(scheme=self.scheme, workload=workload)
+        # memory-side resident state (§2.13): one pool shared by every CC.
+        # None (legacy placement, no capacity) keeps the infinite-memory
+        # expressions below untouched — committed goldens stay bit-true.
+        self.mem = make_memside(cfg.n_mcs, cfg.mc_interleave,
+                                cfg.mc_capacity_pages,
+                                cfg.mem_hot_threshold, cfg.switch_lat)
         # serving hook (§2.9): called as on_core_idle(core, t) when a core
         # has issued its whole trace and its outstanding reads have drained
         self.on_core_idle: Optional[Callable[[Core, float], None]] = None
@@ -921,8 +928,21 @@ class Simulator:
         MC, so its page movement AND the line fetches into it share a link;
         distinct pages spread across independent links per the policy.
         Placement is per-CC-address-space: two CCs' page p land on the same
-        MC — they contend for its downlink, not for the page itself."""
+        MC — they contend for its downlink, not for the page itself.
+
+        This is the legacy static map; with the memory-side state
+        subsystem active (§2.13) the transfer paths resolve residency
+        through ``self.mem`` instead (``touch`` at issue points,
+        ``_mc_peek`` for controller observations)."""
         return mc_place(page, self.cfg.n_mcs, self.cfg.mc_interleave)
+
+    def _mc_peek(self, cc: "CCState", page: int) -> int:
+        """Pure resident-MC read for controller observations (§2.12:
+        observation paths may be evaluated a different number of times
+        per engine, so they must not mutate memside state)."""
+        if self.mem is None:
+            return self.mc_of(page)
+        return self.mem.peek(cc.idx, page)
 
     def net_lat(self, mc: int, t: float) -> float:
         """One-way network latency on MC link ``mc`` at time ``t``."""
@@ -1106,7 +1126,12 @@ class Simulator:
         cc.pending_lines[line] = [req] if req is not None else []
         cc.m.lines_moved += 1
         page = self.page_of(line)
-        mc = self.mc_of(page)
+        if self.mem is None:
+            mc, xl = self.mc_of(page), 0.0
+        else:  # §2.13: resolve residency (allocating on first touch); the
+            # promotion signal is moot here — line-granularity policies
+            # have no local page cache to promote into
+            mc, xl, _ = self.mem.touch(cc.idx, page, "line")
         link = self.links[mc]
         size = cfg.line_bytes + cfg.header_bytes
 
@@ -1115,7 +1140,7 @@ class Simulator:
             self.eng.at(arrive, lambda a: self._on_line_arrival(cc, line, a))
 
         self._request_flight(
-            cc, mc, t, 0.0,
+            cc, mc, t, xl,
             lambda tt: link.send(tt, size, on_tx_done, "line", cc.idx))
         cc.m.net_bytes += size
 
@@ -1123,7 +1148,11 @@ class Simulator:
         """Demand page migration MC->CC: request flight + MC read +
         downlink queue + flight (+ compression pipeline at either end)."""
         cfg = self.cfg
-        mc = self.mc_of(page)
+        if self.mem is None:
+            mc, xl = self.mc_of(page), 0.0
+        else:  # 'page' touch also resets the hotness count (§2.13): the
+            # migration satisfies whatever promotion the tracker wanted
+            mc, xl, _ = self.mem.touch(cc.idx, page, "page")
         link = self.links[mc]
         raw = cfg.page_bytes + cfg.header_bytes
         size = raw
@@ -1146,8 +1175,10 @@ class Simulator:
             arrive = tt + self.net_lat(mc, tt) + (cfg.decomp_lat / 4 if extra else 0.0)
             self.eng.at(arrive, lambda a: self._on_page_arrival(cc, page, a))
 
+        # xl charges the spilled-resident detour (§2.13) on the request
+        # path; decompression above stays keyed on `extra` alone
         self._request_flight(
-            cc, mc, t, extra,
+            cc, mc, t, extra + xl,
             lambda tt: link.send(tt, size, on_tx_done, "page", cc.idx))
 
     def _send_writeback(self, cc: CCState, page: int, t: float):
@@ -1162,7 +1193,10 @@ class Simulator:
         backlog* (the congestion it actually contends with) instead of the
         downlink inflight-page-buffer signal."""
         cfg = self.cfg
-        mc = self.mc_of(page)
+        if self.mem is None:
+            mc, xl = self.mc_of(page), 0.0
+        else:  # 'wb' touch re-allocates a backing page the pool evicted
+            mc, xl, _ = self.mem.touch(cc.idx, page, "wb")
         raw = cfg.page_bytes + cfg.header_bytes
         size = raw
         extra = 0.0
@@ -1176,7 +1210,9 @@ class Simulator:
                 extra = cfg.comp_lat / 4
                 cc.m.bytes_saved_compression += raw - size
             cc.m.net_bytes += size
-            depart = t + extra  # compressed at the CC, then "sent back" on the downlink
+            # compressed at the CC, then "sent back" on the downlink; xl
+            # charges the spilled-resident detour (§2.13)
+            depart = t + extra + xl
             self.eng.at(depart,
                         lambda tt: link.send(tt, size, lambda a: None, "page", cc.idx))
             return
@@ -1189,7 +1225,7 @@ class Simulator:
             extra = cfg.comp_lat / 4
             cc.m.bytes_saved_compression += raw - size
         cc.m.uplink_bytes += size
-        self.eng.at(t + extra,
+        self.eng.at(t + extra + xl,
                     lambda tt: up.send(tt, size, lambda a: None, "page", cc.idx))
 
     # ---------------- arrivals ----------------
@@ -1251,9 +1287,10 @@ class Simulator:
         req = self._mk_req(core, line, wr, t)
         coalesced = page in cc.pending_pages
         cc.ctrl.observe_miss(coalesced)
-        d = cc.ctrl.decide(self._obs(cc, self.mc_of(page), t))
+        d = cc.ctrl.decide(self._obs(cc, self._mc_peek(cc, page), t))
 
-        # coalesce with an inflight page migration
+        # coalesce with an inflight page migration (the page is already
+        # moving, so the line fetch's promotion signal is moot)
         if coalesced:
             if pol.page_carries_requests:
                 cc.pending_pages[page].append(req)
@@ -1279,24 +1316,35 @@ class Simulator:
         else:
             issue_page = issue_line = True
 
+        promote = False
         if issue_line:
             if line in cc.pending_lines:
                 cc.pending_lines[line].append(req)
             else:
                 cc.pending_lines[line] = [req]
-                self._fetch_line_daemon(cc, line, t, req)
+                promote = self._fetch_line_daemon(cc, line, t, req)
         if issue_page:
             waiting = cc.pending_pages.setdefault(page, [])
             if pol.page_carries_requests:
                 waiting.append(req)
             self._send_page(cc, page, t)
+        # after the issue_page block: a demand migration just issued for
+        # this page makes the promotion redundant (guarded inside)
+        if promote:
+            self._maybe_promote(cc, page, t)
         return None
 
-    def _fetch_line_daemon(self, cc: CCState, line: int, t: float, req: Request):
+    def _fetch_line_daemon(self, cc: CCState, line: int, t: float,
+                           req: Request) -> bool:
+        """Returns the hot-page promotion signal (§2.13) so callers can
+        act on it *after* their page-issue bookkeeping settles."""
         cfg = self.cfg
         cc.m.lines_moved += 1
         page = self.page_of(line)
-        mc = self.mc_of(page)
+        if self.mem is None:
+            mc, xl, promote = self.mc_of(page), 0.0, False
+        else:
+            mc, xl, promote = self.mem.touch(cc.idx, page, "line")
         link = self.links[mc]
         size = cfg.line_bytes + cfg.header_bytes
         cc.m.net_bytes += size
@@ -1306,8 +1354,28 @@ class Simulator:
             self.eng.at(arrive, lambda a: self._on_line_arrival(cc, line, a))
 
         self._request_flight(
-            cc, mc, t, 0.0,
+            cc, mc, t, xl,
             lambda tt: link.send(tt, size, on_tx_done, "line", cc.idx))
+        return promote
+
+    def _maybe_promote(self, cc: CCState, page: int, t: float):
+        """Hot-page promotion (§2.13): the access-frequency tracker says
+        this still-remote page keeps absorbing line fetches — migrate it
+        toward the owning CC's page cache, waiterless (later misses
+        coalesce onto the inflight entry; the insert's dirty eviction
+        rides the normal writeback path).  Throttled by the controller's
+        backlog signal: the same inflight-page-buffer utilization the
+        Observation carries, bounded at full (pu < 1.0) rather than at
+        ``page_throttle_hi`` — hotness accumulates precisely in the
+        throttled regime where demand migration stopped, so promotion
+        runs there and only yields when the buffer is truly full."""
+        if page in cc.pending_pages or page in cc.local:
+            return
+        if len(cc.pending_pages) >= self.cfg.inflight_pages:
+            return
+        self.mem.promotions += 1
+        cc.pending_pages[page] = []
+        self._send_page(cc, page, t)
 
     def _drain_retry(self, cc: CCState, t: float):
         n = len(cc.retry)
@@ -1317,14 +1385,15 @@ class Simulator:
                 continue
             line = req.addr
             page = self.page_of(line)
-            d = cc.ctrl.decide(self._obs(cc, self.mc_of(page), t))
+            d = cc.ctrl.decide(self._obs(cc, self._mc_peek(cc, page), t))
             if line in cc.pending_lines:
                 cc.pending_lines[line].append(req)
             elif page in cc.pending_pages:
                 cc.pending_pages[page].append(req)
             elif d.issue_line:
                 cc.pending_lines[line] = [req]
-                self._fetch_line_daemon(cc, line, t, req)
+                if self._fetch_line_daemon(cc, line, t, req):
+                    self._maybe_promote(cc, page, t)
             elif d.issue_page:
                 cc.pending_pages[page] = [req]
                 self._send_page(cc, page, t)
@@ -1338,6 +1407,7 @@ class Simulator:
         for cc in self.ccs:
             cc.m.cycles = max(c.t_end for c in cc.cores)
         if len(self.ccs) == 1:
+            self._memside_rollup(self.m)
             return self.m  # the aggregate IS the single CC's metrics
         # aggregate rollup (§2.5): counters sum in CC order, end-to-end
         # cycles is the makespan, and per_cc keeps the full per-CC split
@@ -1360,7 +1430,16 @@ class Simulator:
             d["cc"] = cc.idx
             m.per_cc.append(d)
         m.cycles = max(cc.m.cycles for cc in self.ccs)
+        self._memside_rollup(m)
         return m
+
+    def _memside_rollup(self, m: Metrics):
+        """Copy the cell-global §2.13 pool counters into the aggregate
+        (the pool is shared across CCs — per_cc entries keep zeros)."""
+        if self.mem is not None:
+            m.mc_spills = self.mem.spills
+            m.mc_evictions = self.mem.evictions
+            m.mc_promotions = self.mem.promotions
 
 
 def simulate(

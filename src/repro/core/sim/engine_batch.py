@@ -67,6 +67,7 @@ from repro.core.sim.engine import (
     mc_place,
     selection_races_line,
 )
+from repro.core.sim.memside import make_memside
 from repro.core.sim.policy import MovementPolicy, get_policy
 from repro.core.sim.trace import compressibility_of, generate
 
@@ -94,16 +95,29 @@ NOP = ("nop",)
 CLS_LINE, CLS_PAGE = 0, 1
 
 
+def uncovered_reason(cfg: SimConfig, scheme: Any) -> Optional[str]:
+    """Why the batch core cannot reproduce this cell bit-for-bit, naming
+    the config field responsible (actionable fallback diagnostics), or
+    ``None`` when the cell is covered."""
+    if isinstance(scheme, (list, tuple)):
+        return ("scheme is a per-CC heterogeneous policy list "
+                "(SharedHeteroLink arbitration, §2.9)")
+    if cfg.serving_router is not None:
+        return (f"serving_router={cfg.serving_router!r} enables the "
+                f"request-level serving layer (§2.9)")
+    if cfg.topology is not None:
+        return (f"topology={cfg.topology!r} routes transfers over a "
+                f"multi-hop fabric (§2.11)")
+    return None
+
+
 def covers(cfg: SimConfig, scheme: Any) -> bool:
     """True when the batch core reproduces this cell bit-for-bit; False
-    routes the cell to the oracle (automatic fallback in run_sweep)."""
-    if isinstance(scheme, (list, tuple)):
-        return False  # per-CC heterogeneous policies (SharedHeteroLink)
-    if cfg.serving_router is not None:
-        return False  # request-level serving layer (§2.9)
-    if cfg.topology is not None:
-        return False  # routed fabric topologies (§2.11): multi-hop paths
-    return True
+    routes the cell to the oracle (automatic fallback in run_sweep).
+    Memory-side state cells (§2.13: mc_capacity_pages set and/or a
+    non-legacy mc_interleave placement) ARE covered — both engines drive
+    the same MemsideState at the same event points."""
+    return uncovered_reason(cfg, scheme) is None
 
 
 # --------------------------------------------------------------------------
@@ -685,6 +699,12 @@ class _Frame:
         self.nmcs = cfg.n_mcs
         self.ileave = cfg.mc_interleave
         self.lat_active = cfg.lat_jitter > 0.0
+        # memory-side resident state (§2.13): the SAME class the oracle
+        # instantiates, driven at the same event points — None keeps the
+        # legacy mc_place expressions untouched (golden bit-parity)
+        self.mem = make_memside(cfg.n_mcs, cfg.mc_interleave,
+                                cfg.mc_capacity_pages,
+                                cfg.mem_hot_threshold, cfg.switch_lat)
 
         # --- policy components ---
         self.gran = _GRAN[pol.granularity]
@@ -1134,18 +1154,23 @@ class _Frame:
         else:
             issue_page = issue_line = True
 
+        promote = False
         if issue_line:
             llist = pl.get(line)
             if llist is not None:
                 llist.append(req)
             else:
                 pl[line] = [req]
-                self._fetch_line_daemon(cc, line, t)
+                promote = self._fetch_line_daemon(cc, line, t)
         if issue_page:
             waiting = pp.setdefault(page, [])
             if self.pcr:
                 waiting.append(req)
             self._send_page(cc, page, t)
+        if promote:
+            # oracle ordering: promotion runs after the demand page-issue
+            # bookkeeping so a triggering miss never double-sends the page
+            self._maybe_promote(cc, page, t)
 
     def _drain_retry(self, cc: int, t: float):
         rq = self.retry[cc]
@@ -1170,7 +1195,8 @@ class _Frame:
                 pp[page].append(req)
             elif (lu < 1.0 if ctrl is None else d.issue_line):
                 pl[line] = [req]
-                self._fetch_line_daemon(cc, line, t)
+                if self._fetch_line_daemon(cc, line, t):
+                    self._maybe_promote(cc, page, t)
             elif (pu < self.pth if ctrl is None else d.issue_page):
                 pp[page] = [req]
                 self._send_page(cc, page, t)
@@ -1197,32 +1223,64 @@ class _Frame:
             return
         pl[line] = [req]
         self.m_lines[cc] += 1
-        mc = mc_place(line // self.lpp, self.nmcs, self.ileave)
+        page = line // self.lpp
+        if self.mem is None:
+            mc, xl = mc_place(page, self.nmcs, self.ileave), 0.0
+        else:  # oracle: _fetch_line — the promotion signal is moot for
+            # line-granularity policies (no local page cache)
+            mc, xl, _ = self.mem.touch(cc, page, "line")
         size = self.lb_hb
-        self._request_flight(cc, mc, t, 0.0, self.links[mc], size, CLS_LINE,
+        self._request_flight(cc, mc, t, xl, self.links[mc], size, CLS_LINE,
                              ("line", cc, line, mc))
         self.m_net[cc] += size
 
-    def _fetch_line_daemon(self, cc: int, line: int, t: float):
+    def _fetch_line_daemon(self, cc: int, line: int, t: float) -> bool:
+        # oracle: _fetch_line_daemon — returns the §2.13 hot-page
+        # promotion signal for the caller to act on after page-issue
+        # bookkeeping settles
         self.m_lines[cc] += 1
-        mc = mc_place(line // self.lpp, self.nmcs, self.ileave)
+        page = line // self.lpp
+        if self.mem is None:
+            mc, xl, promote = (mc_place(page, self.nmcs, self.ileave),
+                               0.0, False)
+        else:
+            mc, xl, promote = self.mem.touch(cc, page, "line")
         size = self.lb_hb
         self.m_net[cc] += size
-        self._request_flight(cc, mc, t, 0.0, self.links[mc], size, CLS_LINE,
+        self._request_flight(cc, mc, t, xl, self.links[mc], size, CLS_LINE,
                              ("line", cc, line, mc))
+        return promote
+
+    def _maybe_promote(self, cc: int, page: int, t: float):
+        # oracle: _maybe_promote — hot-page promotion toward the owning
+        # CC, throttled by the backlog signal (inflight page buffer has
+        # room), waiterless like the oracle's pending_pages[page] = []
+        pp = self.pending_pages[cc]
+        if page in pp or page in self.loc_d[cc]:
+            return
+        if len(pp) >= self.ip:
+            return
+        self.mem.promotions += 1
+        pp[page] = []
+        self._send_page(cc, page, t)
 
     def _ctrl_obs(self, ctrl, cc: int, page: int, t: float,
                   lu: float, pu: float) -> Observation:
         # oracle: Simulator._obs — the uplink backlog (toward the page's
-        # MC) only for controllers that declare needs_uplink
+        # MC) only for controllers that declare needs_uplink; the
+        # resident-MC read is the pure peek (§2.13), never a touch
         ub = 0.0
         if ctrl.needs_uplink and self.uplinks is not None:
-            mc = mc_place(page, self.nmcs, self.ileave)
+            mc = (mc_place(page, self.nmcs, self.ileave)
+                  if self.mem is None else self.mem.peek(cc, page))
             ub = self.uplinks[mc].backlog(t)
         return Observation(t, lu, pu, ub)
 
     def _send_page(self, cc: int, page: int, t: float):
-        mc = mc_place(page, self.nmcs, self.ileave)
+        if self.mem is None:
+            mc, xl = mc_place(page, self.nmcs, self.ileave), 0.0
+        else:  # oracle: _send_page — 'page' touch resets the hotness count
+            mc, xl, _ = self.mem.touch(cc, page, "page")
         raw = self.pb_hb
         size = raw
         extra = 0.0
@@ -1244,11 +1302,17 @@ class _Frame:
                 self.m_saved[cc] += raw - size
         self.m_net[cc] += size
         self.m_pages[cc] += 1
-        self._request_flight(cc, mc, t, extra, self.links[mc], size, CLS_PAGE,
-                             ("page", cc, page, mc, bool(extra)))
+        # xl charges the spilled-resident detour (§2.13) on the request
+        # path; decompression stays keyed on `extra` alone (bool below)
+        self._request_flight(cc, mc, t, extra + xl, self.links[mc], size,
+                             CLS_PAGE, ("page", cc, page, mc, bool(extra)))
 
     def _send_writeback(self, cc: int, page: int, t: float):
-        mc = mc_place(page, self.nmcs, self.ileave)
+        if self.mem is None:
+            mc, xl = mc_place(page, self.nmcs, self.ileave), 0.0
+        else:  # oracle: _send_writeback — 'wb' touch re-allocates a
+            # backing page the pool evicted
+            mc, xl, _ = self.mem.touch(cc, page, "wb")
         raw = self.pb_hb
         size = raw
         extra = 0.0
@@ -1273,7 +1337,7 @@ class _Frame:
                     extra = self.comp4
                     self.m_saved[cc] += raw - size
             self.m_net[cc] += size
-            self._push(t + extra, K_WBSEND, link, (size, cc))
+            self._push(t + extra + xl, K_WBSEND, link, (size, cc))
             return
         up = self.uplinks[mc]
         if ctrl is None:
@@ -1291,7 +1355,7 @@ class _Frame:
             extra = self.comp4
             self.m_saved[cc] += raw - size
         self.m_up[cc] += size
-        self._push(t + extra, K_WBSEND, up, (size, cc))
+        self._push(t + extra + xl, K_WBSEND, up, (size, cc))
 
     def _insert_page(self, cc: int, page: int, t: float):
         # page-cache insert(page); dirty eviction past capacity -> writeback
@@ -1333,6 +1397,7 @@ class _Frame:
             mm.cycles = max(self.cores[k][6] for k in self.cc_cores[i])
             ms.append(mm)
         if self.ncc == 1:
+            self._memside_rollup(ms[0])
             return ms[0]
         m = Metrics(scheme=scheme, workload=self.workload)
         for i, cc in enumerate(ms):
@@ -1353,7 +1418,16 @@ class _Frame:
             d["cc"] = i
             m.per_cc.append(d)
         m.cycles = max(cc.cycles for cc in ms)
+        self._memside_rollup(m)
         return m
+
+    def _memside_rollup(self, m: Metrics):
+        # oracle: Simulator._memside_rollup — §2.13 pool counters are
+        # cell-global (the pool is shared), so per_cc entries stay zero
+        if self.mem is not None:
+            m.mc_spills = self.mem.spills
+            m.mc_evictions = self.mem.evictions
+            m.mc_promotions = self.mem.promotions
 
 
 # --------------------------------------------------------------------------
@@ -1462,10 +1536,11 @@ def run_batch(cells: Sequence[BatchCell], quantum: int = 8192,
     sp = sched_pool if sched_pool is not None else SchedPool()
     frames: List[_Frame] = []
     for cell in cells:
-        if not covers(cell.cfg, cell.scheme):
+        reason = uncovered_reason(cell.cfg, cell.scheme)
+        if reason is not None:
             raise ValueError(
-                f"batch engine does not cover cell {cell!r}; route it to "
-                f"the oracle (see covers())")
+                f"batch engine does not cover cell {cell!r}: {reason}; "
+                f"route it to the oracle (see covers())")
         t0 = time.process_time()
         fr = _build_frame(cell, tp, sp)
         fr.cpu_s += time.process_time() - t0

@@ -13,6 +13,7 @@ out over a process pool (results are identical to the serial run).
   fig7_uplink(...) uplink_bw x write-heavy workload x n_ccs (uplink contention)
   fig8_kernels(...) captured Pallas-kernel streams x policy x bandwidth
   fig11_controllers(...) movement controller x scheme on the fig6/7/8 grids
+  fig12_memside(...) placement x capacity-pressure x tenant-mix memory pool
   paper_claims(...) geomean speedups of daemon over page
 
 Schemes and workloads are registry names (policy.py / trace.py); every
@@ -867,6 +868,82 @@ def fig11_controllers(
     kn = run_sweep(fig11_kernels_spec(controllers=controllers, cfg=cfg,
                                       **dict(kw2)), workers=workers)
     return fig11_geomeans(ab, up, kn)
+
+
+# the fig12 memory-pool grids (DESIGN.md §2.13): finite per-MC capacity and
+# first-class placement policies under multi-tenant '+'-mixes — the scenario
+# family the paper never swept (it models remote memory as an infinite
+# passive address space)
+MEM_PLACEMENTS = ("page", "first_touch", "capacity_aware")
+# pages per MC: None = legacy infinite pool (the bit-identical baseline),
+# 512 = mild pressure (spills begin), 128 = heavy churn (eviction-dominated)
+MEM_CAPACITIES = (None, 512, 128)
+# fig12 compares daemon against the page baseline under capacity pressure;
+# the controller comparison is fig11's concern
+MEM_SCHEMES = ("page", "daemon")
+
+
+def _mem_tag(cap: Optional[int]) -> str:
+    return "inf" if cap is None else str(cap)
+
+
+def fig12_memside_spec(
+    workload_mixes: Iterable[str] = DEFAULT_CC_MIXES,
+    placements: Iterable[str] = MEM_PLACEMENTS,
+    capacities: Iterable[Optional[int]] = MEM_CAPACITIES,
+    *,
+    cfg: Optional[SimConfig] = None,
+    **kw,
+) -> Sweep:
+    """Tenant mix x placement x capacity pressure x scheme (DESIGN.md
+    §2.13): four CCs run skewed '+'-mixes against four finite MCs, so
+    placement decides which modules fill, spills detour across the ring,
+    and cold residents churn out under pressure.  Shared by the API and
+    benchmarks/fig12_memside.py so the 'daemon_vs_page_geomean@mem=*'
+    BENCH_sim.json entries have one meaning.  Every cell is batch-engine
+    covered (§2.13 cells run on the lockstep core)."""
+    axes = {
+        "workload": tuple(workload_mixes),
+        "mc_interleave": tuple(placements),
+        "mc_capacity_pages": tuple(capacities),
+        "scheme": MEM_SCHEMES,
+    }
+    base = cfg or SimConfig(n_ccs=4, n_mcs=4, link_bw_frac=0.25)
+    return Sweep(name="fig12_memside", axes=axes, base=base, **_sweep_kw(kw))
+
+
+def fig12_geomeans(res: SweepResult) -> Dict[str, float]:
+    """Derived daemon-vs-page geomeans per (capacity, placement) cell of an
+    executed fig12 grid — the single source of the
+    'daemon_vs_page_geomean@mem={inf|<cap>}:place=<p>' ledger keys (gated
+    by benchmarks/check_bench.py).  The headline question: does DaeMon's
+    decoupled-granularity advantage survive when page migration also
+    triggers capacity evictions?  '@mem=inf' rows must reproduce the
+    infinite-pool behaviour of the legacy grids."""
+    out: Dict[str, float] = {}
+    g = res.grid("workload", "mc_interleave", "mc_capacity_pages", "scheme")
+    for cap in res.axes["mc_capacity_pages"]:
+        for pl in res.axes["mc_interleave"]:
+            out[f"daemon_vs_page_geomean@mem={_mem_tag(cap)}:place={pl}"] = \
+                geomean(
+                    g[(w, pl, cap, "page")].metrics.cycles
+                    / g[(w, pl, cap, "daemon")].metrics.cycles
+                    for w in res.axes["workload"])
+    return out
+
+
+def fig12_memside(
+    *,
+    cfg: Optional[SimConfig] = None,
+    workers: Optional[int] = None,
+    engine: Optional[str] = None,
+    **kw,
+) -> Dict[str, float]:
+    """Memory-pool grid (DESIGN.md §2.13): daemon-vs-page geomeans per
+    (capacity pressure, placement policy) over the multi-tenant mixes."""
+    res = run_sweep(fig12_memside_spec(cfg=cfg, **kw), workers=workers,
+                    engine=engine)
+    return fig12_geomeans(res)
 
 
 def paper_claims(

@@ -36,6 +36,14 @@ land asynchronously — write-release semantics).  Per-request completion
 cycles roll up into the Metrics extensions ``request_p50`` /
 ``request_p99`` / ``goodput`` plus a full per-request record list.
 
+With ``cfg.mc_capacity_pages`` set (§2.13), the serving run's tenants
+contend for the finite memory pool too: every phase's working set is
+allocated through the shared :class:`~repro.core.sim.memside.MemsideState`,
+so skewed '+'-mixes (one tenant's KV pages crowding out another's) show up
+as cross-MC spills and cold-resident evictions in ``mc_spills`` /
+``mc_evictions`` — no serving-layer code is capacity-aware; the pressure
+flows through the same engine hooks the closed-loop model uses.
+
 Everything is deterministic given (cfg, scheme, seed): serial runs,
 pooled sweep workers, and repeated processes produce bit-identical
 per-request completion cycles (locked by tests/test_serving.py).

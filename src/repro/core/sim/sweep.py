@@ -35,6 +35,7 @@ from repro.core.sim.config import Metrics, SimConfig
 from repro.core.sim.controller import get_controller
 from repro.core.sim.engine import simulate
 from repro.core.sim.engine_batch import BatchCell, covers, run_batch
+from repro.core.sim.memside import get_placement
 from repro.core.sim.policy import MovementPolicy, get_policy
 from repro.core.sim.serving import get_router, serve_one
 from repro.core.sim.trace import generate, get_workload
@@ -175,6 +176,8 @@ class Sweep:
             for c in self.axes.get(ax, ()):
                 if c is not None:
                     get_controller(c)
+        for p in self.axes.get("mc_interleave", ()):
+            get_placement(p)
         object.__setattr__(self, "axes", {k: tuple(v) for k, v in self.axes.items()})
 
     def cells(self) -> List[Dict[str, Any]]:
